@@ -1,0 +1,71 @@
+"""Shared benchmark setup: clusters, paper GPT workloads, cached memory
+estimators, and the AMP/Varuna 'try recommendations one by one' protocol
+from §VII-A."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.configs.gpt_paper import GPT_1_1B, GPT_3_1B, GPT_8_1B, GPT_11_1B
+from repro.core import (HIGH_END, MID_RANGE, Workload, fit_memory_estimator,
+                        ground_truth_memory, measure, profile_bandwidth,
+                        true_bandwidth_matrix)
+
+SEQ = 2048
+CLUSTERS = {"mid-range": MID_RANGE, "high-end": HIGH_END}
+# paper: models sized to reach the memory limit per cluster (§VII-A)
+CLUSTER_MODEL = {("mid-range", 8): GPT_1_1B, ("mid-range", 16): GPT_3_1B,
+                 ("high-end", 8): GPT_8_1B, ("high-end", 16): GPT_11_1B}
+
+
+def workload(cluster: str, nodes: int, bs_global: int = 256) -> Workload:
+    return Workload(CLUSTER_MODEL[(cluster, nodes)], SEQ, bs_global)
+
+
+@functools.lru_cache(maxsize=8)
+def matrices(cluster: str, nodes: int, day: int = 0):
+    spec = CLUSTERS[cluster].with_nodes(nodes)
+    bw_true = true_bandwidth_matrix(spec, day)
+    bw_meas, cost = profile_bandwidth(spec, day)
+    return spec, bw_true, bw_meas, cost
+
+
+_EST_CACHE = {}
+
+
+def memory_estimator(cluster: str, *, steps: int = 12_000, residual=True):
+    """Per-cluster MLP estimator trained on <=4-node configs (paper §VI)."""
+    key = (cluster, steps, residual)
+    if key not in _EST_CACHE:
+        spec = CLUSTERS[cluster]
+        models = [CLUSTER_MODEL[(cluster, 8)], CLUSTER_MODEL[(cluster, 16)]]
+        ws = [Workload(m, SEQ, bsg) for m in models
+              for bsg in (32, 64, 128, 256, 512)]
+        _EST_CACHE[key] = fit_memory_estimator(
+            ws, spec, fit_nodes=4, steps=steps, residual=residual)
+    return _EST_CACHE[key]
+
+
+def first_runnable(ranked, w, spec):
+    """The paper's AMP/Varuna protocol: walk the recommendation list,
+    'run' each on the cluster, stop at the first that does not OOM.
+    Returns (candidate, n_trials)."""
+    for i, c in enumerate(ranked):
+        if ground_truth_memory(w, c.conf, spec) <= spec.gpu_mem:
+            return c, i + 1
+    return None, len(ranked)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.s * 1e6

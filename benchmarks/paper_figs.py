@@ -1,0 +1,269 @@
+"""One benchmark per paper table/figure (§VII).  Each returns a list of
+(name, us_per_call, derived) CSV rows."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (Conf, amp_configure, amp_latency, build_profile,
+                        configure, default_mapping, ground_truth_memory,
+                        measure, mlm_configure, pipette_latency,
+                        true_bandwidth_matrix, varuna_configure)
+from repro.core.memory import analytical_estimate, enumerate_confs, mape
+
+from .common import (CLUSTERS, Timer, first_runnable, matrices,
+                     memory_estimator, workload)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 — interconnect heterogeneity over time
+# ---------------------------------------------------------------------------
+
+def fig3_heterogeneity():
+    rows = []
+    with Timer() as t:
+        spec = CLUSTERS["high-end"].with_nodes(8)
+        spreads, drifts = [], []
+        day0 = None
+        for day in range(8):      # 40 days in the paper; 8 samples here
+            bw = true_bandwidth_matrix(spec, day)
+            inter = bw[bw < spec.intra_bw * 0.5]
+            spreads.append(inter.max() / inter.min())
+            if day0 is None:
+                day0 = inter
+            else:
+                drifts.append(float(np.mean(np.abs(inter - day0) / day0)))
+    rows.append(("fig3_link_spread_max_over_min", t.us,
+                 f"{np.mean(spreads):.2f}"))
+    rows.append(("fig3_day_to_day_drift_pct", t.us,
+                 f"{100 * np.mean(drifts):.1f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5a — latency estimation MAPE (Pipette vs AMP model)
+# ---------------------------------------------------------------------------
+
+def fig5a_latency_mape():
+    rows = []
+    for cluster in ("mid-range", "high-end"):
+        spec, bw_true, bw_meas, _ = matrices(cluster, 16)
+        w = workload(cluster, 16)
+        errs_p, errs_a = [], []
+        with Timer() as t:
+            sample = [c for c in enumerate_confs(spec.n_gpus, w.bs_global,
+                                                 n_layers=w.cfg.n_layers)
+                      if c.bs_micro <= 8][::2][:30]
+            for conf in sample:
+                prof = build_profile(w, spec, conf)
+                m = default_mapping(conf)
+                truth = measure(conf, m, w, spec, bw_true)
+                errs_p.append(abs(pipette_latency(conf, m, bw_meas, prof,
+                                                  spec) - truth) / truth)
+                errs_a.append(abs(amp_latency(conf, m, spec, prof) - truth)
+                              / truth)
+        rows.append((f"fig5a_mape_pipette_{cluster}", t.us,
+                     f"{100 * np.mean(errs_p):.2f}"))
+        rows.append((f"fig5a_mape_amp_{cluster}", t.us,
+                     f"{100 * np.mean(errs_a):.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5b — OOM count among the top-10 recommendations
+# ---------------------------------------------------------------------------
+
+def fig5b_top10_oom():
+    rows = []
+    cluster, nodes = "mid-range", 16
+    spec, bw_true, bw_meas, _ = matrices(cluster, nodes)
+    w = workload(cluster, nodes)
+
+    def oom_count(ranked):
+        return sum(ground_truth_memory(w, c.conf, spec) > spec.gpu_mem
+                   for c in ranked[:10])
+
+    with Timer() as t:
+        amp = amp_configure(w, spec)
+        vr = varuna_configure(w, spec)
+        est = memory_estimator(cluster)
+        ppt = configure(w, spec, bw_meas, estimator=est,
+                        mem_limit=spec.gpu_mem, dedicate=False)
+    rows.append(("fig5b_oom_top10_amp", t.us, str(oom_count(amp.ranked))))
+    rows.append(("fig5b_oom_top10_varuna", t.us, str(oom_count(vr.ranked))))
+    rows.append(("fig5b_oom_top10_pipette", t.us, str(oom_count(ppt.ranked))))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — training time and speedup vs MLM / Varuna / AMP (+ablation)
+# ---------------------------------------------------------------------------
+
+def fig6_speedup():
+    rows = []
+    for cluster in ("mid-range", "high-end"):
+        spec, bw_true, bw_meas, _ = matrices(cluster, 16)
+        w = workload(cluster, 16)
+        est = memory_estimator(cluster)
+        with Timer() as t:
+            mlm = mlm_configure(w, spec, bw_true)
+            t_mlm = mlm.best.latency
+
+            amp = amp_configure(w, spec)
+            amp_c, trials = first_runnable(amp.ranked, w, spec)
+            t_amp = measure(amp_c.conf, amp_c.mapping, w, spec, bw_true)
+
+            vr = varuna_configure(w, spec)
+            vr_c, _ = first_runnable(vr.ranked, w, spec)
+            t_vr = measure(vr_c.conf, vr_c.mapping, w, spec, bw_true)
+
+            # PPT-L: latency+memory estimators, identity mapping
+            pl = configure(w, spec, bw_meas, estimator=est,
+                           mem_limit=spec.gpu_mem, dedicate=False)
+            t_pl = measure(pl.best.conf, pl.best.mapping, w, spec, bw_true)
+
+            # PPT-LF: + fine-grained worker dedication
+            plf = configure(w, spec, bw_meas, estimator=est,
+                            mem_limit=spec.gpu_mem, sa_seconds=0.25,
+                            sa_iters=4000, seed=1)
+            t_plf = measure(plf.best.conf, plf.best.mapping, w, spec,
+                            bw_true)
+        rows += [
+            (f"fig6_{cluster}_iter_ms_mlm", t.us, f"{t_mlm*1e3:.1f}"),
+            (f"fig6_{cluster}_iter_ms_varuna", t.us, f"{t_vr*1e3:.1f}"),
+            (f"fig6_{cluster}_iter_ms_amp", t.us, f"{t_amp*1e3:.1f}"),
+            (f"fig6_{cluster}_iter_ms_ppt_l", t.us, f"{t_pl*1e3:.1f}"),
+            (f"fig6_{cluster}_iter_ms_ppt_lf", t.us, f"{t_plf*1e3:.1f}"),
+            (f"fig6_{cluster}_speedup_ppt_lf_over_amp", t.us,
+             f"{t_amp/t_plf:.3f}"),
+            (f"fig6_{cluster}_speedup_ppt_lf_over_mlm", t.us,
+             f"{t_mlm/t_plf:.3f}"),
+            (f"fig6_{cluster}_speedup_ppt_l_over_vr", t.us,
+             f"{t_vr/t_pl:.3f}"),
+            (f"fig6_{cluster}_amp_trials_until_runnable", t.us,
+             str(trials)),
+        ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — memory estimation MAPE (MLP vs analytical [20])
+# ---------------------------------------------------------------------------
+
+def fig7_memory_mape():
+    rows = []
+    for cluster in ("mid-range", "high-end"):
+        spec = CLUSTERS[cluster]
+        est = memory_estimator(cluster)
+        w = workload(cluster, 16)
+        with Timer() as t:
+            preds, anas, trues = [], [], []
+            confs = [c for c in enumerate_confs(
+                spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers)
+                if c.bs_micro <= 8]
+            for conf in confs[:215]:     # paper: 215 data points
+                trues.append(ground_truth_memory(w, conf, spec))
+                preds.append(est.predict(w.cfg, conf))
+                anas.append(analytical_estimate(w, conf))
+        rows.append((f"fig7_mape_mlp_{cluster}", t.us,
+                     f"{mape(preds, trues):.2f}"))
+        rows.append((f"fig7_mape_analytical_{cluster}", t.us,
+                     f"{mape(anas, trues):.2f}"))
+        rows.append((f"fig7_n_points_{cluster}", t.us, str(len(trues))))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table II — configuration overhead
+# ---------------------------------------------------------------------------
+
+def table2_overhead():
+    rows = []
+    for cluster, nodes in (("mid-range", 8), ("mid-range", 16),
+                           ("high-end", 8), ("high-end", 16)):
+        spec, bw_true, bw_meas, profile_cost = matrices(cluster, nodes)
+        w = workload(cluster, nodes)
+        est = memory_estimator(cluster)
+        with Timer() as t:
+            res = configure(w, spec, bw_meas, estimator=est,
+                            mem_limit=spec.gpu_mem, sa_seconds=0.15,
+                            sa_iters=2500)
+        t_iter = measure(res.best.conf, res.best.mapping, w, spec, bw_true)
+        # paper's overhead metric: conf time / full 300K-iteration training
+        total_train_s = t_iter * 300_000
+        conf_s = profile_cost + res.overhead["total_s"]
+        rows += [
+            (f"table2_{cluster}_{nodes}n_profiling_s", t.us,
+             f"{profile_cost:.1f}"),
+            (f"table2_{cluster}_{nodes}n_sa_s", t.us,
+             f"{res.overhead['sa_s']:.1f}"),
+            (f"table2_{cluster}_{nodes}n_memest_s", t.us,
+             f"{res.overhead['mem_estimator_s']:.3f}"),
+            (f"table2_{cluster}_{nodes}n_overhead_pct", t.us,
+             f"{100 * conf_s / total_train_s:.4f}"),
+        ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — cluster/model size scalability (weak scaling)
+# ---------------------------------------------------------------------------
+
+def fig8_scalability():
+    rows = []
+    from repro.configs.gpt_paper import GPT_1_1B, GPT_3_1B, GPT_8_1B
+    from repro.core import Workload
+    scale_model = {4: GPT_1_1B, 8: GPT_1_1B, 16: GPT_3_1B}
+    for nodes in (4, 8, 16):
+        cluster = "mid-range"
+        spec, bw_true, bw_meas, _ = matrices(cluster, nodes)
+        w = Workload(scale_model[nodes], 2048, 256)
+        est = memory_estimator(cluster)
+        with Timer() as t:
+            amp = amp_configure(w, spec)
+            amp_c, _ = first_runnable(amp.ranked, w, spec)
+            t_amp = measure(amp_c.conf, amp_c.mapping, w, spec, bw_true)
+            ppt = configure(w, spec, bw_meas, estimator=est,
+                            mem_limit=spec.gpu_mem, sa_seconds=0.2,
+                            sa_iters=3000, seed=2)
+            t_ppt = measure(ppt.best.conf, ppt.best.mapping, w, spec,
+                            bw_true)
+        rows.append((f"fig8_speedup_over_amp_{nodes*8}gpus", t.us,
+                     f"{t_amp/t_ppt:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — micro/minibatch size sensitivity
+# ---------------------------------------------------------------------------
+
+def fig9_batch_sensitivity():
+    rows = []
+    cluster, nodes = "mid-range", 16
+    spec, bw_true, bw_meas, _ = matrices(cluster, nodes)
+    est = memory_estimator(cluster)
+    from repro.core import Workload
+    cfg = workload(cluster, nodes).cfg
+
+    def best_with(w, fixed_micro=None):
+        res_a = amp_configure(w, spec, max_micro=fixed_micro or 16)
+        ranked = [c for c in res_a.ranked
+                  if fixed_micro is None or c.conf.bs_micro == fixed_micro]
+        amp_c, _ = first_runnable(ranked, w, spec)
+        t_amp = measure(amp_c.conf, amp_c.mapping, w, spec, bw_true)
+        res_p = configure(w, spec, bw_meas, estimator=est,
+                          mem_limit=spec.gpu_mem, sa_seconds=0.12,
+                          sa_iters=2000, fixed_micro=fixed_micro, seed=3)
+        best = res_p.best
+        t_ppt = measure(best.conf, best.mapping, w, spec, bw_true)
+        return t_amp / t_ppt
+
+    with Timer() as t:
+        micro = [(mb, best_with(Workload(cfg, 2048, 256), fixed_micro=mb))
+                 for mb in (1, 2, 4, 8)]          # fixed minibatch 256
+        mini = [(bsg, best_with(Workload(cfg, 2048, bsg), fixed_micro=8))
+                for bsg in (128, 256, 512)]       # fixed microbatch 8
+    for mb, s in micro:
+        rows.append((f"fig9_speedup_microbatch_{mb}", t.us, f"{s:.3f}"))
+    for bsg, s in mini:
+        rows.append((f"fig9_speedup_minibatch_{bsg}", t.us, f"{s:.3f}"))
+    return rows

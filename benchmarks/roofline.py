@@ -1,0 +1,94 @@
+"""Roofline report (deliverable g): reads the dry-run artifacts and emits
+the per-(arch x shape x mesh) three-term table + markdown for
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ART = Path("artifacts/dryrun")
+
+V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+
+def load_cells(art_dir: Path = ART, tag: str = "") -> List[Dict]:
+    cells = []
+    for p in sorted(art_dir.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("tag", "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def roofline_rows(cells: List[Dict], mesh: Optional[str] = "16x16"):
+    rows = []
+    for d in cells:
+        if mesh and d.get("mesh") != mesh:
+            continue
+        name = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        if "skipped" in d:
+            rows.append({"cell": name, "skipped": d["skipped"]})
+            continue
+        t = {k: d[k] for k in ("t_compute", "t_memory", "t_collective")}
+        dom = max(t, key=t.get)
+        bound = max(t.values())
+        frac = d["t_compute"] / bound if bound else 0.0
+        rows.append({
+            "cell": name,
+            "t_compute": d["t_compute"], "t_memory": d["t_memory"],
+            "t_collective": d["t_collective"], "bottleneck": dom[2:],
+            "roofline_frac": frac,
+            "useful_flops_ratio": d.get("useful_flops_ratio", 0.0),
+            "bytes_per_dev_gb": d.get("bytes_per_device", 0) / 2 ** 30,
+            "fits_v5e": d.get("fits_v5e_16g"),
+        })
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = ["| cell | compute s | memory s | collective s | bottleneck | "
+           "roofline frac | 6ND/HLO | bytes/dev GiB | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['cell']} | — | — | — | SKIP | — | — | — | — |")
+            continue
+        out.append(
+            f"| {r['cell']} | {r['t_compute']:.3f} | {r['t_memory']:.3f} | "
+            f"{r['t_collective']:.3f} | {r['bottleneck']} | "
+            f"{r['roofline_frac']:.3f} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['bytes_per_dev_gb']:.1f} | "
+            f"{'yes' if r['fits_v5e'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def bench_rows():
+    """CSV rows for benchmarks.run."""
+    cells = load_cells()
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        rr = roofline_rows(cells, mesh)
+        live = [r for r in rr if "skipped" not in r]
+        if not live:
+            continue
+        worst = min(live, key=lambda r: r["roofline_frac"])
+        rows.append((f"roofline_{mesh}_n_cells", 0.0, str(len(rr))))
+        rows.append((f"roofline_{mesh}_n_skipped", 0.0,
+                     str(len(rr) - len(live))))
+        rows.append((f"roofline_{mesh}_median_frac", 0.0,
+                     f"{sorted(r['roofline_frac'] for r in live)[len(live)//2]:.3f}"))
+        rows.append((f"roofline_{mesh}_worst_cell", 0.0,
+                     f"{worst['cell']}:{worst['roofline_frac']:.3f}"))
+        for b in ("compute", "memory", "collective"):
+            n = sum(r["bottleneck"] == b for r in live)
+            rows.append((f"roofline_{mesh}_{b}_bound_cells", 0.0, str(n)))
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(markdown_table(roofline_rows(cells, mesh)))

@@ -1,0 +1,49 @@
+"""Benchmark harness (deliverable d): one function per paper table/figure
+plus the roofline report.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark name filter")
+    args = ap.parse_args()
+
+    from . import paper_figs, roofline
+    benches = [
+        ("fig3", paper_figs.fig3_heterogeneity),
+        ("fig5a", paper_figs.fig5a_latency_mape),
+        ("fig5b", paper_figs.fig5b_top10_oom),
+        ("fig6", paper_figs.fig6_speedup),
+        ("fig7", paper_figs.fig7_memory_mape),
+        ("table2", paper_figs.table2_overhead),
+        ("fig8", paper_figs.fig8_scalability),
+        ("fig9", paper_figs.fig9_batch_sensitivity),
+        ("roofline", roofline.bench_rows),
+    ]
+    only = {s for s in args.only.split(",") if s}
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.0f},{row[2]}")
+            sys.stdout.flush()
+        except Exception as e:                      # pragma: no cover
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {[n for n, _ in failures]}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,81 @@
+"""The paper's headline experiment at full scale: configure GPT-3.1B
+training on the simulated 128-GPU mid-range cluster and compare Pipette
+(PPT-L / PPT-LF) against Megatron-LM, Varuna and AMP (Fig. 6).
+
+    PYTHONPATH=src python examples/configure_cluster.py [--cluster high-end]
+"""
+import argparse
+import time
+
+from repro.core import (HIGH_END, MID_RANGE, Workload, amp_configure,
+                        configure, fit_memory_estimator,
+                        ground_truth_memory, measure, mlm_configure,
+                        profile_bandwidth, true_bandwidth_matrix,
+                        varuna_configure)
+from repro.configs.gpt_paper import GPT_3_1B, GPT_11_1B
+
+
+def first_runnable(ranked, w, spec):
+    for i, c in enumerate(ranked):
+        if ground_truth_memory(w, c.conf, spec) <= spec.gpu_mem:
+            return c, i + 1
+    return None, len(ranked)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", choices=["mid-range", "high-end"],
+                    default="mid-range")
+    ap.add_argument("--sa-seconds", type=float, default=1.0)
+    args = ap.parse_args()
+
+    spec = MID_RANGE if args.cluster == "mid-range" else HIGH_END
+    model = GPT_3_1B if args.cluster == "mid-range" else GPT_11_1B
+    w = Workload(model, 2048, 256)
+    print(f"cluster: {spec.name} ({spec.n_gpus} GPUs), model {model.name}")
+
+    bw_true = true_bandwidth_matrix(spec)
+    bw_meas, cost = profile_bandwidth(spec)
+    print(f"[profile] bandwidth matrix measured "
+          f"(~{cost:.0f}s on the real cluster)")
+
+    t0 = time.time()
+    est = fit_memory_estimator(
+        [Workload(model, 2048, bsg) for bsg in (64, 128, 256, 512)], spec,
+        fit_nodes=4, steps=12_000, residual=True)
+    print(f"[memest] MLP fitted on <=4-node profiles in {time.time()-t0:.0f}s")
+
+    rows = []
+    mlm = mlm_configure(w, spec, bw_true)
+    rows.append(("Megatron-LM (tp=8 heuristic)", mlm.best.conf,
+                 mlm.best.latency))
+    vr, _ = first_runnable(varuna_configure(w, spec).ranked, w, spec)
+    rows.append(("Varuna (pp-only)", vr.conf,
+                 measure(vr.conf, vr.mapping, w, spec, bw_true)))
+    amp, trials = first_runnable(amp_configure(w, spec).ranked, w, spec)
+    rows.append((f"AMP (runnable after {trials} trials)", amp.conf,
+                 measure(amp.conf, amp.mapping, w, spec, bw_true)))
+    pl = configure(w, spec, bw_meas, estimator=est, mem_limit=spec.gpu_mem,
+                   dedicate=False)
+    rows.append(("Pipette PPT-L", pl.best.conf,
+                 measure(pl.best.conf, pl.best.mapping, w, spec, bw_true)))
+    t0 = time.time()
+    plf = configure(w, spec, bw_meas, estimator=est, mem_limit=spec.gpu_mem,
+                    sa_seconds=args.sa_seconds, sa_iters=20_000, seed=1)
+    sa_time = time.time() - t0
+    rows.append(("Pipette PPT-LF", plf.best.conf,
+                 measure(plf.best.conf, plf.best.mapping, w, spec, bw_true)))
+
+    base = rows[2][2]   # AMP
+    print(f"\n{'method':38s} {'config':28s} {'iter ms':>9s} {'vs AMP':>7s}")
+    for name, conf, t in rows:
+        print(f"{name:38s} {str(conf):28s} {t*1e3:9.1f} {base/t:7.2f}x")
+    print(f"\n[pipette] total search time {sa_time:.0f}s "
+          f"(SA dedication per candidate config)")
+    print("[pipette] worker dedication for the best config "
+          "(GPU ids, stages x (tp*dp)):")
+    print(plf.best.mapping.reshape(plf.best.conf.pp, -1))
+
+
+if __name__ == "__main__":
+    main()

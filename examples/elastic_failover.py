@@ -1,0 +1,61 @@
+"""Fault-tolerance showcase: train, lose a node, let Pipette re-plan for
+the degraded cluster, reshard the checkpoint, and keep training.
+
+    PYTHONPATH=src python examples/elastic_failover.py
+"""
+import jax
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import MID_RANGE, Workload
+from repro.data.pipeline import DataLoader, LoaderConfig, SyntheticCorpus
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.models.sharding import ShardCtx
+from repro.optim.adamw import AdamW
+from repro.runtime.elastic import replan
+
+
+def main():
+    cfg = configs.get("qwen2-7b").reduced()
+    ctx = ShardCtx()
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    loader = DataLoader(SyntheticCorpus(cfg.vocab_size, 0, noise=0.02),
+                        LoaderConfig(8, 64))
+    mgr = CheckpointManager("checkpoints/elastic", keep=2, async_save=False)
+
+    w = Workload(cfg, 64, 64)
+    plan = replan(w, MID_RANGE, healthy_nodes=4, sa_seconds=0.2)
+    print(f"[plan] 4 nodes healthy: {plan.result.best.conf} "
+          f"est {plan.result.best.latency*1e3:.1f} ms/iter")
+
+    step = jax.jit(make_train_step(cfg, ctx, opt,
+                                   n_micro=min(4, plan.result.best.conf.n_mb)))
+    for s in range(20):
+        params, state, m = step(params, state, loader.batch_at(s))
+    mgr.save(20, (params, state))
+    print(f"[train] 20 steps done, loss {float(m['loss']):.3f}; "
+          f"checkpoint saved")
+
+    # --- node failure: only 3 nodes healthy now -------------------------
+    print("[fault] node lost! re-planning for 3 nodes...")
+    plan2 = replan(w, MID_RANGE, healthy_nodes=3, sa_seconds=0.2)
+    best = plan2.result.best
+    print(f"[plan] degraded cluster: {best.conf} "
+          f"est {best.latency*1e3:.1f} ms/iter "
+          f"(mapping over {best.conf.n_gpus} GPUs)")
+
+    # restore + reshard (same host here; on a pod the shardings change)
+    (params, state), at = mgr.restore((params, state))
+    step2 = jax.jit(make_train_step(cfg, ctx, opt,
+                                    n_micro=min(4, best.conf.n_mb)))
+    for s in range(at, at + 10):
+        params, state, m = step2(params, state, loader.batch_at(s))
+    print(f"[train] resumed at step {at}, continued to {at+10}, "
+          f"loss {float(m['loss']):.3f} — elastic failover complete")
+
+
+if __name__ == "__main__":
+    main()

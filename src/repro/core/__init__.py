@@ -1,0 +1,15 @@
+"""Pipette core: the paper's automatic fine-grained 3D-parallel training
+configurator — latency estimator (Eq. 3-6), MLP memory estimator (§VI),
+SA worker dedication (§IV), Algorithm 1 search, the discrete-event cluster
+simulator used as the real-cluster stand-in, and the AMP/Varuna/Megatron
+baselines."""
+
+from .cluster import (ClusterSpec, HIGH_END, MID_RANGE, TPU_POD,
+                      profile_bandwidth, true_bandwidth_matrix)
+from .simulator import Conf, Profile, Workload, build_profile, default_mapping, measure
+from .latency import amp_latency, pipette_latency, varuna_latency
+from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
+                     fit_memory_estimator, ground_truth_memory, mape)
+from .dedication import anneal, perm_to_mapping
+from .search import Candidate, SearchResult, configure
+from .baselines import amp_configure, mlm_configure, varuna_configure

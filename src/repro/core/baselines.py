@@ -1,0 +1,67 @@
+"""Baseline configurators: AMP [8], Varuna [12], and the Megatron-LM
+manual heuristic [14] — as characterised in the paper's evaluation."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from .cluster import ClusterSpec
+from .latency import amp_latency, varuna_latency
+from .memory import enumerate_confs, ground_truth_memory
+from .search import Candidate, SearchResult
+from .simulator import Conf, Workload, build_profile, default_mapping, measure
+
+
+def amp_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> SearchResult:
+    """AMP: Eq. 1 latency model, nominal bandwidths, memory-unaware,
+    identity GPU assignment."""
+    cands = []
+    for conf in enumerate_confs(spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers):
+        if conf.bs_micro > max_micro:
+            continue
+        prof = build_profile(w, spec, conf)
+        lat = amp_latency(conf, default_mapping(conf), spec, prof)
+        cands.append(Candidate(conf, default_mapping(conf), lat, float("nan")))
+    cands.sort(key=lambda c: c.latency)
+    return SearchResult(best=cands[0] if cands else None, ranked=cands)
+
+
+def varuna_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> SearchResult:
+    """Varuna: pipeline+data parallelism only (tp = 1), memory-unaware."""
+    cands = []
+    for conf in enumerate_confs(spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers):
+        if conf.tp != 1 or conf.bs_micro > max_micro:
+            continue
+        prof = build_profile(w, spec, conf)
+        lat = varuna_latency(conf, spec, prof)
+        cands.append(Candidate(conf, default_mapping(conf), lat, float("nan")))
+    cands.sort(key=lambda c: c.latency)
+    return SearchResult(best=cands[0] if cands else None, ranked=cands)
+
+
+def mlm_configure(w: Workload, spec: ClusterSpec, bw_true: np.ndarray, *,
+                  max_micro: int = 16, trials: int = 6,
+                  seed: int = 0) -> SearchResult:
+    """Megatron-LM manual tuning: tp = gpus-per-node, then try promising
+    (pp, mb) combinations one by one on the cluster (here: the simulator)
+    until the fastest runnable one is found — i.e. actual manual labour,
+    memory-checked by construction."""
+    tp = spec.gpus_per_node
+    cands: List[Candidate] = []
+    for conf in enumerate_confs(spec.n_gpus, w.bs_global, max_tp=tp,
+                                n_layers=w.cfg.n_layers):
+        if conf.tp != tp or conf.bs_micro > max_micro:
+            continue
+        if ground_truth_memory(w, conf, spec) > spec.gpu_mem:
+            continue                      # a human discards the OOM run
+        cands.append(Candidate(conf, default_mapping(conf), float("inf"),
+                               float("nan")))
+    # the expert tries the most promising handful, smallest pp first
+    cands.sort(key=lambda c: (c.conf.pp, -c.conf.bs_micro))
+    tried = cands[:trials]
+    for c in tried:
+        c.latency = measure(c.conf, c.mapping, w, spec, bw_true, seed=seed)
+    tried.sort(key=lambda c: c.latency)
+    return SearchResult(best=tried[0] if tried else None, ranked=tried)

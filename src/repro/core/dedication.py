@@ -1,0 +1,91 @@
+"""Fine-grained worker dedication (§IV): simulated annealing over the 1:1
+logical-worker -> GPU mapping.
+
+Moves (paper §IV): *migration* (remove one element, reinsert at a random
+position), *swap* (exchange two elements) and *reverse* (reverse a
+substring — exploits the near-symmetric bidirectional bandwidths).
+Temperature decay alpha = 0.999; the budget is wall-clock seconds with an
+iteration cap so tests stay fast.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from .cluster import ClusterSpec
+from .latency import pipette_latency
+from .simulator import Conf, Profile
+
+
+def perm_to_mapping(perm: np.ndarray, conf: Conf) -> np.ndarray:
+    """Flat permutation -> (pp, tp, dp) worker mapping.
+
+    Flattening keeps tp fastest so contiguous GPUs (same node) serve one
+    tensor-parallel group in the identity permutation."""
+    return perm.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
+
+
+@dataclass
+class SAResult:
+    mapping: np.ndarray
+    perm: np.ndarray
+    latency: float
+    iters: int
+    seconds: float
+    trace: list
+
+
+def _move(perm: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    n = len(perm)
+    p = perm.copy()
+    kind = rng.integers(0, 3)
+    i, j = sorted(rng.choice(n, 2, replace=False))
+    if kind == 0:          # migration
+        el = p[i]
+        p = np.delete(p, i)
+        p = np.insert(p, j % (n - 1), el)
+    elif kind == 1:        # swap
+        p[i], p[j] = p[j], p[i]
+    else:                  # reverse
+        p[i:j + 1] = p[i:j + 1][::-1]
+    return p
+
+
+def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
+           objective: Optional[Callable[[np.ndarray], float]] = None,
+           time_limit_s: float = 2.0, max_iters: int = 20_000,
+           alpha: float = 0.999, seed: int = 0,
+           init_perm: Optional[np.ndarray] = None) -> SAResult:
+    rng = np.random.default_rng(seed)
+    n = conf.n_gpus
+    perm = np.arange(n) if init_perm is None else init_perm.copy()
+
+    if objective is None:
+        def objective(p):
+            return pipette_latency(conf, perm_to_mapping(p, conf), bw, prof, spec)
+
+    cur = objective(perm)
+    best_perm, best = perm.copy(), cur
+    # initial temperature from the spread of a few random proposals
+    probes = [abs(objective(_move(perm, rng)) - cur) for _ in range(8)]
+    temp = max(max(probes), cur * 1e-3, 1e-12)
+
+    t0 = time.perf_counter()
+    it = 0
+    trace = [(0, best)]
+    while it < max_iters and (time.perf_counter() - t0) < time_limit_s:
+        cand = _move(perm, rng)
+        val = objective(cand)
+        delta = val - cur
+        if delta <= 0 or rng.random() < np.exp(-delta / max(temp, 1e-15)):
+            perm, cur = cand, val
+            if cur < best:
+                best_perm, best = perm.copy(), cur
+                trace.append((it, best))
+        temp *= alpha
+        it += 1
+    return SAResult(perm_to_mapping(best_perm, conf), best_perm, best, it,
+                    time.perf_counter() - t0, trace)

@@ -1,0 +1,87 @@
+"""Parameter and FLOP accounting shared by the configurator, the roofline
+analysis and the benchmarks.
+
+Conventions:
+  * ``param_count``       — total trainable parameters.
+  * ``active_param_count``— params touched per token (MoE: top-k experts).
+  * ``train_flops``       — 6 * N_active * tokens (fwd 2N + bwd 4N) plus the
+                            attention term 12 * L * d_head*H * s^2-ish when
+                            requested explicitly (MODEL_FLOPS in the roofline
+                            table uses the plain 6*N*D convention per spec).
+"""
+from __future__ import annotations
+
+from ..models.config import ModelConfig
+
+
+def param_count(cfg: ModelConfig) -> int:
+    d, L = cfg.d_model, cfg.n_layers
+    n = cfg.vocab_size * d                       # embedding
+    if not cfg.tie_embeddings:
+        n += d * cfg.vocab_size                  # lm head
+    n += d                                       # final norm
+
+    per_layer = d                                # ln1
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        per_layer += d * h * hd + 2 * d * kv * hd + h * hd * d
+        if cfg.qkv_bias:
+            per_layer += h * hd + 2 * kv * hd
+        per_layer += d                           # ln2
+        if cfg.family == "moe":
+            per_layer += d * cfg.n_experts
+            per_layer += cfg.n_experts * 3 * d * cfg.d_ff
+        else:
+            per_layer += 3 * d * cfg.d_ff
+    else:                                        # mamba layers
+        di, N = cfg.d_inner, cfg.ssm_state
+        if cfg.ssm_variant == "mamba2":
+            nh = cfg.n_ssm_heads
+            conv_dim = di + 2 * N
+            per_layer += d * (2 * di + 2 * N + nh) + cfg.ssm_conv * conv_dim \
+                + conv_dim + 3 * nh + di + di * d
+        else:
+            per_layer += d * 2 * di + cfg.ssm_conv * di + di \
+                + di * (cfg.dt_rank + 2 * N) + cfg.dt_rank * di + di \
+                + di * N + 2 * di + di * d
+    n += L * per_layer
+
+    if cfg.hybrid_attn_period:                   # zamba2 shared block
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        n += 2 * d + d * h * hd + 2 * d * kv * hd + h * hd * d + 3 * d * cfg.d_ff
+    return int(n)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    if cfg.family != "moe":
+        return param_count(cfg)
+    d, L = cfg.d_model, cfg.n_layers
+    dense_total = param_count(cfg)
+    all_expert = L * cfg.n_experts * 3 * d * cfg.d_ff
+    active_expert = L * cfg.experts_per_token * 3 * d * cfg.d_ff
+    return int(dense_total - all_expert + active_expert)
+
+
+def model_flops(cfg: ModelConfig, tokens: int, *, train: bool = True) -> float:
+    """The spec's MODEL_FLOPS convention: 6*N*D (dense) / 6*N_active*D."""
+    mult = 6.0 if train else 2.0
+    return mult * active_param_count(cfg) * tokens
+
+
+def attention_flops(cfg: ModelConfig, seq: int, tokens: int, *, train: bool = True) -> float:
+    """Extra score/value FLOPs not captured by 6*N*D (for MFU context)."""
+    if cfg.family == "ssm":
+        return 0.0
+    L_att = cfg.n_layers if not cfg.hybrid_attn_period else \
+        cfg.n_layers // cfg.hybrid_attn_period
+    if cfg.family == "hybrid":
+        L = L_att
+    else:
+        L = cfg.n_layers
+    per_tok = 0.0
+    for i in range(L):
+        w = cfg.layer_window(i) if cfg.family != "hybrid" else 0
+        span = min(seq, w) if w else seq
+        per_tok += 2 * 2 * cfg.n_heads * cfg.hd * span / 2  # qk^T + pv, causal/2
+    mult = 3.0 if train else 1.0
+    return mult * per_tok * tokens

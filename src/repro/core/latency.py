@@ -1,0 +1,93 @@
+"""Latency estimators.
+
+``pipette_latency`` — the paper's refined critical-path model (Eq. 3-6):
+memory-efficient 1F1B exposes the inter-stage P2P hidden critical path
+(n_mb/pp) times, the DP all-reduce of the *first* stage is the only one on
+the critical path, and every communication term is evaluated on the
+*profiled* bandwidth matrix.
+
+``amp_latency`` — the prior art's model (Eq. 1): GPipe-flavoured critical
+path (P2P counted once) with document-specified nominal bandwidths.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .cluster import ClusterSpec, min_group_bw, ring_allreduce_time
+from .simulator import Conf, Profile, dp_allreduce_times
+
+
+def _tp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+              spec: ClusterSpec, ref_bw: float) -> float:
+    """Profiled slowdown of the slowest tensor-parallel group vs the nominal
+    intra-node bandwidth the per-microbatch T_tp was profiled at.  Keeps the
+    estimator honest when a mapping strands a TP group across nodes."""
+    if conf.tp == 1:
+        return 1.0
+    worst = 1.0
+    for x in range(conf.pp):
+        for z in range(conf.dp):
+            group = [int(mapping[x, y, z]) for y in range(conf.tp)]
+            gbw = min_group_bw(bw, group)
+            if np.isfinite(gbw) and gbw > 0:
+                worst = max(worst, ref_bw / gbw)
+    return worst
+
+
+def _t_pp_chain(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                prof: Profile) -> float:
+    """Eq. 5: slowest end-to-end pipeline chain, fwd+bwd message per hop."""
+    if conf.pp == 1:
+        return 0.0
+    worst = 0.0
+    for z in range(conf.dp):
+        for y in range(conf.tp):
+            t = 0.0
+            for x in range(conf.pp - 1):
+                b = bw[int(mapping[x, y, z]), int(mapping[x + 1, y, z])]
+                t += 2.0 * prof.msg_pp / b
+            worst = max(worst, t)
+    return worst
+
+
+def _t_dp_first_stage(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                      prof: Profile, spec: ClusterSpec) -> float:
+    """Eq. 6: hierarchical-ring all-reduce of stage 1, slowest tp group."""
+    return float(dp_allreduce_times(conf, mapping, bw, prof, spec)[0])
+
+
+def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                    prof: Profile, spec: ClusterSpec) -> float:
+    """Eq. 3-4: T = T_bubble * (n_mb / pp) + T_straggler + T_dp."""
+    c = prof.c_fwd + prof.c_bwd
+    t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * _tp_scale(conf, mapping, bw,
+                                                       spec, prof.tp_ref_bw)
+    t_pp = _t_pp_chain(conf, mapping, bw, prof)
+    t_bubble = conf.pp * (c + t_tp) + t_pp
+    t_straggler = (conf.pp - 1) * (c + t_tp)
+    t_dp = _t_dp_first_stage(conf, mapping, bw, prof, spec)
+    return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
+
+
+def amp_latency(conf: Conf, mapping: np.ndarray, spec: ClusterSpec,
+                prof: Profile) -> float:
+    """Eq. 1 with nominal (document-specified) bandwidths."""
+    c = prof.c_fwd + prof.c_bwd
+    t_tp = prof.t_tp_fwd + prof.t_tp_bwd
+    # nominal uniform matrix: intra for same node, inter otherwise
+    t_pp_hop = 2.0 * prof.msg_pp / spec.inter_bw
+    t_pp = (conf.pp - 1) * t_pp_hop
+    # nominal flat ring over dp
+    t_dp = ring_allreduce_time(prof.msg_dp, spec.inter_bw, conf.dp)
+    return (conf.n_mb - 1) * (c + t_tp) + conf.pp * (c + t_tp) + t_pp + t_dp
+
+
+def varuna_latency(conf: Conf, spec: ClusterSpec, prof: Profile) -> float:
+    """Varuna-style estimate: pipeline-only focus, nominal bandwidths,
+    memory-unaware (used to rank its candidate configs)."""
+    c = prof.c_fwd + prof.c_bwd
+    t_pp_hop = 2.0 * prof.msg_pp / spec.inter_bw
+    bubble = (conf.pp - 1) * (c + t_pp_hop)
+    steady = conf.n_mb * c
+    t_dp = ring_allreduce_time(prof.msg_dp, spec.inter_bw, conf.dp)
+    return steady + bubble + t_dp

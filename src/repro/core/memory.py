@@ -1,0 +1,194 @@
+"""Per-GPU memory: ground truth, the analytical baseline [20], and the
+paper's MLP estimator (§VI).
+
+Ground truth models what a Megatron-style framework actually allocates:
+weights + optimizer state, 1F1B in-flight activations, logits workspace,
+and the framework/library overheads ([21]) that the analytical baseline
+misses — CUDA/runtime context, collective buffers, workspace, allocator
+fragmentation, and a reproducible per-config residual.  The MLP estimator
+is trained ONLY on configs using <= ``fit_nodes`` nodes (paper: 4 nodes /
+32 GPUs) and must extrapolate to the full cluster.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from ..models.config import ModelConfig
+from . import flops as F
+from .cluster import ClusterSpec
+from .simulator import Conf, Workload
+
+
+# ---------------------------------------------------------------------------
+# ground truth (the "measured" per-GPU peak)
+# ---------------------------------------------------------------------------
+
+BYTES_PER_PARAM_STATE = 18.0       # bf16 param+grad, fp32 master+m+v
+
+
+def _stage_params(cfg: ModelConfig, pp: int) -> float:
+    total = F.param_count(cfg)
+    embed = 2 * cfg.vocab_size * cfg.d_model
+    body = (total - embed) / pp
+    return body + embed / min(pp, 2)           # first/last stage holds embed
+
+
+def _act_bytes_per_mb(cfg: ModelConfig, conf: Conf, seq: int) -> float:
+    layers_stage = -(-cfg.n_layers // conf.pp)
+    per_layer = seq * conf.bs_micro * (34 * cfg.d_model +
+                                       5 * max(cfg.n_heads, 1) * seq)
+    return layers_stage * per_layer / conf.tp
+
+
+def _config_residual(cfg: ModelConfig, conf: Conf, spec: ClusterSpec) -> float:
+    """Reproducible 'library variance' component, up to 0.6 GB."""
+    key = f"{cfg.name}|{conf.pp}|{conf.tp}|{conf.dp}|{conf.bs_micro}|{spec.name}"
+    h = int(hashlib.sha1(key.encode()).hexdigest()[:8], 16)
+    return (h % 1000) / 1000.0 * 0.6e9
+
+
+def ground_truth_memory(w: Workload, conf: Conf, spec: ClusterSpec) -> float:
+    """'Measured' peak bytes per GPU for this configuration."""
+    cfg = w.cfg
+    weights = _stage_params(cfg, conf.pp) / conf.tp * BYTES_PER_PARAM_STATE
+    inflight = min(conf.pp, conf.n_mb)
+    acts = _act_bytes_per_mb(cfg, conf, w.seq) * inflight
+    logits = conf.bs_micro * w.seq * cfg.vocab_size * 4.0 * 2 / conf.tp
+    framework = (1.1e9                                  # runtime context
+                 + 0.15e9                               # collective buffers
+                 + 8e6 * (conf.tp + conf.pp)            # per-communicator
+                 + 24e6 * np.log2(conf.dp + 1)          # ring channels
+                 + 0.45e9)                              # kernel workspace
+    frag = 0.06 * (weights + acts)
+    residual = _config_residual(cfg, conf, spec)
+    return weights + acts + logits + framework + frag + residual
+
+
+def analytical_estimate(w: Workload, conf: Conf) -> float:
+    """The baseline estimator [20]: weights + one microbatch of activations.
+
+    It ignores 1F1B in-flight multiplicity, logits workspace and every
+    framework/library overhead — which is why it underestimates badly
+    (paper Fig. 7: 59-66% MAPE)."""
+    cfg = w.cfg
+    weights = _stage_params(cfg, conf.pp) / conf.tp * BYTES_PER_PARAM_STATE
+    acts = _act_bytes_per_mb(cfg, conf, w.seq)
+    return weights + acts
+
+
+# ---------------------------------------------------------------------------
+# MLP estimator (Eq. 7)
+# ---------------------------------------------------------------------------
+
+def _features(cfg: ModelConfig, conf: Conf) -> np.ndarray:
+    v = [conf.n_gpus, cfg.n_layers, cfg.d_model, max(cfg.n_heads, 1),
+         conf.tp, conf.pp, conf.dp, conf.bs_micro, conf.bs_mini,
+         conf.bs_global]
+    return np.log(np.asarray(v, np.float64))
+
+
+@dataclass
+class MemoryEstimator:
+    """MLP(n_gpus, n_layers, n_hidden, n_heads, tp, pp, dp, bs_micro,
+    bs_mini, bs_global) -> peak bytes, with a soft safety margin.
+
+    ``residual=True`` is a beyond-paper variant: the MLP learns
+    log(actual / analytical) instead of log(actual), anchoring the
+    extrapolation to the analytical power-law structure (EXPERIMENTS.md
+    §Fig7 reports both)."""
+    params: list
+    x_mean: np.ndarray
+    x_std: np.ndarray
+    y_mean: float
+    y_std: float
+    soft_margin: float = 0.92
+    residual: bool = False
+    workload_seq: int = 2048
+
+    def predict(self, cfg: ModelConfig, conf: Conf) -> float:
+        from .mlp import mlp_forward
+        import jax.numpy as jnp
+        x = (_features(cfg, conf) - self.x_mean) / self.x_std
+        y = float(mlp_forward(self.params, jnp.asarray(x[None], jnp.float32))[0, 0])
+        pred = float(np.exp(y * self.y_std + self.y_mean))
+        if self.residual:
+            w = Workload(cfg, self.workload_seq, conf.bs_global)
+            pred *= analytical_estimate(w, conf)
+        return pred
+
+    def fits(self, cfg: ModelConfig, conf: Conf, mem_limit: float) -> bool:
+        return self.predict(cfg, conf) <= mem_limit * self.soft_margin
+
+
+def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
+                    n_layers: int = 10 ** 9) -> List[Conf]:
+    out = []
+    for pp in range(1, n_gpus + 1):
+        if n_gpus % pp or pp > n_layers:
+            continue
+        rest = n_gpus // pp
+        for tp in range(1, rest + 1):
+            if rest % tp or (max_tp and tp > max_tp):
+                continue
+            dp = rest // tp
+            if bs_global % dp:
+                continue
+            bs_mini = bs_global // dp
+            for mb in range(1, bs_mini + 1):
+                if bs_mini % mb:
+                    continue
+                out.append(Conf(pp, tp, dp, mb, bs_global))
+    return out
+
+
+def profile_memory_dataset(workloads: Sequence[Workload], spec: ClusterSpec,
+                           *, fit_nodes: int = 4) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Profiled (features, log-bytes) pairs from configs on <= fit_nodes."""
+    xs, ys, meta = [], [], []
+    max_gpus = fit_nodes * spec.gpus_per_node
+    for w in workloads:
+        for g_nodes in range(1, fit_nodes + 1):
+            g = g_nodes * spec.gpus_per_node
+            for conf in enumerate_confs(g, w.bs_global,
+                                        max_tp=spec.gpus_per_node,
+                                        n_layers=w.cfg.n_layers):
+                if conf.bs_micro > 16:
+                    continue
+                xs.append(_features(w.cfg, conf))
+                ys.append(np.log(ground_truth_memory(w, conf, spec)))
+                meta.append((w, conf))
+    return np.asarray(xs), np.asarray(ys), meta
+
+
+def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
+                         fit_nodes: int = 4, steps: int = 20_000,
+                         hidden: int = 200, depth: int = 5,
+                         seed: int = 0, residual: bool = False) -> MemoryEstimator:
+    import jax
+    import jax.numpy as jnp
+    from .mlp import init_mlp, train_mlp
+
+    x, y, meta = profile_memory_dataset(workloads, spec, fit_nodes=fit_nodes)
+    if residual:
+        base = np.array([np.log(analytical_estimate(w, c)) for w, c in meta])
+        y = y - base
+    xm, xs = x.mean(0), x.std(0) + 1e-9
+    ym, ys = y.mean(), y.std() + 1e-9
+    xn = ((x - xm) / xs).astype(np.float32)
+    yn = ((y - ym) / ys).astype(np.float32)
+    sizes = [x.shape[1]] + [hidden] * (depth - 1) + [1]
+    params = init_mlp(jax.random.PRNGKey(seed), sizes)
+    params = train_mlp(params, jnp.asarray(xn), jnp.asarray(yn), steps=steps)
+    return MemoryEstimator(params, xm, xs, float(ym), float(ys),
+                           residual=residual,
+                           workload_seq=workloads[0].seq)
+
+
+def mape(pred: Iterable[float], true: Iterable[float]) -> float:
+    p = np.asarray(list(pred), float)
+    t = np.asarray(list(true), float)
+    return float(np.mean(np.abs(p - t) / t) * 100.0)

@@ -1,0 +1,56 @@
+"""Minimal JAX MLP + Adam used by the memory estimator (paper §VI: five
+layers, 200 hidden units, trained on profiled configurations)."""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_mlp(key, sizes: List[int]):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (a, b), jnp.float32) * np.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def mlp_forward(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.gelu(x)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "lr"))
+def train_mlp(params, x, y, *, steps: int = 20_000, lr: float = 1e-3):
+    """Full-batch Adam regression on (x, y) with cosine LR decay."""
+    def loss_fn(p):
+        pred = mlp_forward(p, x)[:, 0]
+        return jnp.mean((pred - y) ** 2)
+
+    def adam_step(state, _):
+        p, m, v, t = state
+        g = jax.grad(loss_fn)(p)
+        t = t + 1
+        cur_lr = lr * (0.02 + 0.98 * 0.5 *
+                       (1 + jnp.cos(jnp.pi * t / steps)))
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree.map(
+            lambda a, mm, vv: a - cur_lr * mm / (jnp.sqrt(vv) + 1e-8),
+            p, mh, vh)
+        return (p, m, v, t), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = (params, zeros, jax.tree.map(jnp.zeros_like, params),
+             jnp.zeros((), jnp.float32))
+    state, _ = jax.lax.scan(adam_step, state, None, length=steps)
+    return state[0]

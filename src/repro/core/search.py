@@ -1,0 +1,88 @@
+"""Algorithm 1 — the Pipette configurator.
+
+Enumerates (pp, tp, dp) with pp*tp*dp = G and every microbatch divisor,
+prunes configurations the memory estimator rejects, runs SA worker
+dedication on each survivor scored by the latency estimator, and returns
+the best (Conf, Map, T) plus a ranked list (for the Fig. 5b style top-k
+analyses)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from .cluster import ClusterSpec
+from .dedication import SAResult, anneal
+from .latency import pipette_latency
+from .memory import MemoryEstimator, enumerate_confs
+from .simulator import Conf, Profile, Workload, build_profile, default_mapping
+
+
+@dataclass
+class Candidate:
+    conf: Conf
+    mapping: np.ndarray
+    latency: float
+    mem_pred: float
+
+
+@dataclass
+class SearchResult:
+    best: Optional[Candidate]
+    ranked: List[Candidate]
+    overhead: dict = field(default_factory=dict)
+
+    def top(self, k: int = 10) -> List[Candidate]:
+        return self.ranked[:k]
+
+
+def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
+              estimator: Optional[MemoryEstimator] = None,
+              mem_limit: Optional[float] = None,
+              sa_seconds: float = 1.0, sa_iters: int = 8_000,
+              max_micro: int = 16, fixed_micro: Optional[int] = None,
+              seed: int = 0,
+              dedicate: bool = True) -> SearchResult:
+    """Pipette (Algorithm 1).  ``dedicate=False`` gives the PPT-L ablation
+    (latency+memory estimators only, identity mapping)."""
+    t0 = time.perf_counter()
+    mem_limit = mem_limit if mem_limit is not None else spec.gpu_mem
+    g = spec.n_gpus
+    cands: List[Candidate] = []
+    mem_time = 0.0
+    sa_time = 0.0
+
+    for conf in enumerate_confs(g, w.bs_global, n_layers=w.cfg.n_layers):
+        if conf.bs_micro > max_micro:
+            continue
+        if fixed_micro is not None and conf.bs_micro != fixed_micro:
+            continue
+        prof = build_profile(w, spec, conf)
+        tm = time.perf_counter()
+        if estimator is not None:
+            pred = estimator.predict(w.cfg, conf)
+            mem_time += time.perf_counter() - tm
+            if pred > mem_limit * estimator.soft_margin:
+                continue
+        else:
+            pred = float("nan")
+        if dedicate:
+            ts = time.perf_counter()
+            res = anneal(conf, bw, prof, spec, time_limit_s=sa_seconds,
+                         max_iters=sa_iters, seed=seed)
+            sa_time += time.perf_counter() - ts
+            cands.append(Candidate(conf, res.mapping, res.latency, pred))
+        else:
+            m = default_mapping(conf)
+            lat = pipette_latency(conf, m, bw, prof, spec)
+            cands.append(Candidate(conf, m, lat, pred))
+
+    cands.sort(key=lambda c: c.latency)
+    return SearchResult(
+        best=cands[0] if cands else None,
+        ranked=cands,
+        overhead={"total_s": time.perf_counter() - t0,
+                  "sa_s": sa_time, "mem_estimator_s": mem_time,
+                  "n_candidates": len(cands)})

@@ -1,0 +1,257 @@
+"""Discrete-event simulator of 3D-parallel training iterations.
+
+This plays the role of the *real cluster* in the paper's evaluation
+(DESIGN.md §2): configurations recommended by Pipette and the baselines are
+"run" here, and both latency models (Pipette Eq. 3-6, AMP Eq. 1) are scored
+against it.  It simulates the memory-efficient 1F1B schedule event-by-event
+over the heterogeneous bandwidth matrix, including the effects the
+first-order models do NOT capture — per-link p2p chains, fwd/bwd link
+contention, per-op jitter and warmup transients — so estimator MAPEs are
+meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..models.config import ModelConfig
+from . import flops as F
+from .cluster import ClusterSpec, min_group_bw, ring_allreduce_time
+
+
+# ---------------------------------------------------------------------------
+# configuration / workload
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Conf:
+    pp: int
+    tp: int
+    dp: int
+    bs_micro: int
+    bs_global: int
+
+    @property
+    def n_gpus(self) -> int:
+        return self.pp * self.tp * self.dp
+
+    @property
+    def bs_mini(self) -> int:
+        return self.bs_global // self.dp
+
+    @property
+    def n_mb(self) -> int:
+        return self.bs_mini // self.bs_micro
+
+    def valid(self) -> bool:
+        return (self.bs_global % self.dp == 0 and
+                self.bs_mini % self.bs_micro == 0)
+
+    def __str__(self):
+        return (f"pp{self.pp}·tp{self.tp}·dp{self.dp}"
+                f"·mb{self.bs_micro}(n_mb={self.n_mb})")
+
+
+@dataclass(frozen=True)
+class Workload:
+    cfg: ModelConfig
+    seq: int
+    bs_global: int
+    grad_bytes: int = 4            # fp32 main grads (Megatron default)
+
+
+def default_mapping(conf: Conf) -> np.ndarray:
+    """Identity (node-major) worker dedication: tp contiguous, then dp,
+    then pp — the standard Megatron-LM order."""
+    g = np.arange(conf.n_gpus)
+    # worker (x, y, z) -> gpu x*(dp*tp) + z*tp + y
+    return g.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# profiled per-microbatch quantities (Alg. 1 uses these as inputs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Profile:
+    c_fwd: float                   # per-microbatch fwd compute seconds
+    c_bwd: float
+    t_tp_fwd: float                # per-microbatch TP all-reduce seconds, fwd
+    t_tp_bwd: float
+    msg_pp: float                  # bytes of one inter-stage activation
+    msg_dp: float                  # per-GPU gradient bytes (stage share)
+    stage_params: float            # params on the largest stage
+    tp_ref_bw: float = 300e9       # bandwidth T_tp was profiled at
+
+
+def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
+    cfg = w.cfg
+    layers_stage = -(-cfg.n_layers // conf.pp)
+    tokens_mb = conf.bs_micro * w.seq
+    n_active = F.active_param_count(cfg)
+    body = n_active - 2 * cfg.vocab_size * cfg.d_model
+    body = max(body, int(0.5 * n_active))
+    stage_flops_fwd = 2.0 * (body * layers_stage / cfg.n_layers) * tokens_mb
+    stage_flops_fwd += 2.0 * F.attention_flops(cfg, w.seq, tokens_mb, train=False) \
+        * layers_stage / cfg.n_layers / 2
+    # embedding + head flops live on first/last stage; fold in evenly
+    stage_flops_fwd += 2.0 * 2 * cfg.vocab_size * cfg.d_model * tokens_mb / conf.pp
+    # GEMM batch-efficiency: small microbatches underutilise the GPU
+    # (this is why AMP-style memory-blind searches drift toward large
+    # bs_micro and recommend OOM configs — §VI / Fig. 5b)
+    eff_mb = conf.bs_micro / (conf.bs_micro + 1.0)
+    thru = spec.gpu_flops * spec.efficiency * 1.25 * eff_mb * conf.tp
+    c_fwd = stage_flops_fwd / thru
+    c_bwd = 2.0 * c_fwd
+
+    # Megatron TP: 2 all-reduces per layer per direction.  When a TP group
+    # cannot fit inside a node, its ring bottlenecks on the (nominal)
+    # inter-node link — visible to every configurator.
+    msg_tp = conf.bs_micro * w.seq * cfg.d_model * 2
+    tp_ref_bw = spec.intra_bw if conf.tp <= spec.gpus_per_node \
+        else spec.inter_bw
+    t_ar = ring_allreduce_time(msg_tp, tp_ref_bw, conf.tp)
+    t_tp = 2 * layers_stage * t_ar
+    msg_pp = conf.bs_micro * w.seq * cfg.d_model * 2.0
+    p_total = F.param_count(cfg)
+    stage_params = (p_total - 2 * cfg.vocab_size * cfg.d_model) / conf.pp \
+        + 2 * cfg.vocab_size * cfg.d_model / min(conf.pp, 2)
+    msg_dp = stage_params / conf.tp * w.grad_bytes
+    return Profile(c_fwd, c_bwd, t_tp, 2 * t_tp, msg_pp, msg_dp,
+                   stage_params, tp_ref_bw)
+
+
+# ---------------------------------------------------------------------------
+# 1F1B schedule simulation
+# ---------------------------------------------------------------------------
+
+def _one_f_one_b_order(pp: int, s: int, n_mb: int):
+    warm = min(pp - s, n_mb)
+    ops = [("f", m) for m in range(warm)]
+    nf = warm
+    for m in range(n_mb):
+        ops.append(("b", m))
+        if nf < n_mb:
+            ops.append(("f", nf))
+            nf += 1
+    return ops
+
+
+def dp_allreduce_times(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                       prof: Profile, spec: ClusterSpec) -> np.ndarray:
+    """Hierarchical-ring DP all-reduce seconds per pipeline stage (Eq. 6
+    structure, evaluated on an arbitrary bandwidth matrix)."""
+    out = np.zeros(conf.pp)
+    for x in range(conf.pp):
+        worst = 0.0
+        for y in range(conf.tp):
+            group = [int(mapping[x, y, z]) for z in range(conf.dp)]
+            nodes: Dict[int, list] = {}
+            for gpu in group:
+                nodes.setdefault(spec.node_of(gpu), []).append(gpu)
+            intra_t = 0.0
+            for gs in nodes.values():
+                if len(gs) > 1:
+                    t = ring_allreduce_time(prof.msg_dp, min_group_bw(bw, gs),
+                                            len(gs), phases=4)
+                    intra_t = max(intra_t, t)
+            reps = [gs[0] for gs in nodes.values()]
+            inter_t = 0.0
+            if len(reps) > 1:
+                inter_t = ring_allreduce_time(prof.msg_dp, min_group_bw(bw, reps),
+                                              len(reps), phases=2)
+            worst = max(worst, intra_t + inter_t)
+        out[x] = worst
+    return out
+
+
+def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                       prof: Profile, spec: ClusterSpec, *,
+                       jitter: float = 0.015, contention: float = 0.05,
+                       seed: int = 0) -> Dict:
+    """Event-driven 1F1B iteration.  Returns dict with 'total' seconds."""
+    pp, tp, dp, n_mb = conf.pp, conf.tp, conf.dp, conf.n_mb
+    rng = np.random.default_rng(seed * 131071 + conf.n_gpus)
+
+    # per-replica p2p link times between adjacent stages (slowest tp pair)
+    t_pp = np.zeros((dp, max(pp - 1, 1)))
+    for z in range(dp):
+        for x in range(pp - 1):
+            link = min(bw[int(mapping[x, y, z]), int(mapping[x + 1, y, z])]
+                       for y in range(tp))
+            t_pp[z, x] = prof.msg_pp / link
+
+    # actual TP time uses true intra-group links (model uses nominal)
+    t_tpf = np.zeros((dp, pp))
+    for z in range(dp):
+        for x in range(pp):
+            group = [int(mapping[x, y, z]) for y in range(tp)]
+            gbw = min_group_bw(bw, group)
+            scale = prof.tp_ref_bw / gbw if np.isfinite(gbw) and gbw > 0 else 1.0
+            t_tpf[z, x] = prof.t_tp_fwd * scale
+
+    finish_stage = np.zeros((dp, pp))
+    for z in range(dp):
+        orders = [_one_f_one_b_order(pp, s, n_mb) for s in range(pp)]
+        ptr = [0] * pp
+        t_stage = [0.0] * pp
+        done_f: Dict[Tuple[int, int], float] = {}
+        done_b: Dict[Tuple[int, int], float] = {}
+        remaining = sum(len(o) for o in orders)
+        while remaining:
+            progressed = False
+            for s in range(pp):
+                while ptr[s] < len(orders[s]):
+                    op, m = orders[s][ptr[s]]
+                    if op == "f":
+                        if s == 0:
+                            ready = 0.0
+                        else:
+                            dep = done_f.get((s - 1, m))
+                            if dep is None:
+                                break
+                            cont = 1.0 + (contention if m >= pp else 0.0)
+                            ready = dep + t_pp[z, s - 1] * cont
+                        dur = prof.c_fwd + t_tpf[z, s]
+                    else:
+                        if s == pp - 1:
+                            dep = done_f.get((s, m))
+                        else:
+                            dep = done_b.get((s + 1, m))
+                        if dep is None:
+                            break
+                        ready = dep if s == pp - 1 else dep + t_pp[z, s] * (1 + contention)
+                        dur = prof.c_bwd + 2 * t_tpf[z, s]
+                    if m == 0:
+                        dur *= 1.03          # warmup transient
+                    dur *= 1.0 + jitter * rng.standard_normal()
+                    start = max(t_stage[s], ready)
+                    end = start + max(dur, 0.0)
+                    if op == "f":
+                        done_f[(s, m)] = end
+                    else:
+                        done_b[(s, m)] = end
+                    t_stage[s] = end
+                    ptr[s] += 1
+                    remaining -= 1
+                    progressed = True
+            if not progressed:
+                raise RuntimeError("1F1B schedule deadlock (invalid order)")
+        finish_stage[z] = t_stage
+
+    t_dp = dp_allreduce_times(conf, mapping, bw, prof, spec)
+    stage_finish = finish_stage.max(axis=0)          # DP sync couples replicas
+    total = float((stage_finish + t_dp).max())
+    return {"total": total, "stage_finish": stage_finish, "t_dp": t_dp,
+            "t_pp": t_pp}
+
+
+def measure(conf: Conf, mapping: np.ndarray, w: Workload, spec: ClusterSpec,
+            bw_true: np.ndarray, *, seed: int = 0) -> float:
+    """'Run' one training iteration on the simulated cluster -> seconds."""
+    prof = build_profile(w, spec, conf)
+    return simulate_iteration(conf, mapping, bw_true, prof, spec,
+                              seed=seed)["total"]

@@ -1,0 +1,111 @@
+"""Blocked flash attention (fwd) as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): the online-softmax tiles live in VMEM via
+explicit BlockSpecs; the MXU sees (block_q x head_dim) @ (head_dim x
+block_k) matmuls with hardware-aligned 128-multiples; the KV-block axis is
+the innermost (sequential) grid dimension so the running (m, l, acc) state
+stays resident in VMEM scratch between iterations.  GQA is handled in the
+BlockSpec index maps (query head h reads KV head h // group) — no repeated
+KV materialisation in HBM.
+
+Supports causal masking and sliding windows (gemma3 local layers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int):
+    i = pl.program_id(2)            # q block
+    j = pl.program_id(3)            # kv block (sequential, innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (bq, bk)
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = jnp.full((block_q, block_k), True)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window > 0:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        out = acc_scr[...] / l[:, None]
+        # rows with every key masked -> 0, not the mean of V
+        out = jnp.where(m_scr[...][:, None] <= NEG_INF * 0.5, 0.0, out)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    n_q, n_k = sq // block_q, sk // block_k
+    grid = (b, h, n_q, n_k)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (d ** 0.5), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _scratch((block_q,)),
+            _scratch((block_q,)),
+            _scratch((block_q, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:                                    # pragma: no cover
+        return pl.MemorySpace.ANY(shape, jnp.float32)

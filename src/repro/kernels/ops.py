@@ -1,0 +1,55 @@
+"""Public jit'd wrappers that dispatch between the Pallas kernels (TPU
+target) and the pure-jnp references.
+
+On the TPU backend the Pallas path compiles natively; on CPU the kernels
+run under ``interpret=True`` (bit-accurate but slow) or fall back to the
+reference, so the same model code lowers everywhere.  The multi-pod
+dry-run always lowers the reference path — Pallas cannot lower to the CPU
+backend and kernel-side FLOPs/bytes are identical for roofline purposes
+(see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _fa
+from .rmsnorm import rmsnorm as _rms
+from .selective_scan import selective_scan as _scan
+
+
+def _mode() -> str:
+    """'pallas' | 'interpret' | 'ref'."""
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env in ("pallas", "interpret", "ref"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D)."""
+    m = _mode()
+    if m == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _fa(q, k, v, causal=causal, window=window, block_q=block_q,
+               block_k=block_k, interpret=(m == "interpret"))
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5):
+    m = _mode()
+    if m == "ref":
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    return _rms(x, w, eps=eps, interpret=(m == "interpret"))
+
+
+def selective_scan(x, dt, b, c, a, *, chunk: int = 64, block_d: int = 256):
+    m = _mode()
+    if m == "ref":
+        return ref.selective_scan_ref(x, dt, b, c, a)
+    return _scan(x, dt, b, c, a, chunk=chunk, block_d=block_d,
+                 interpret=(m == "interpret"))

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D).  O(S^2) softmax attention."""
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, kv, g, sq, d) * scale
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    ok = jnp.full((sq, sk), True)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window > 0:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def selective_scan_ref(x, dt, B, C, A):
+    """Time-major naive recurrence.  x, dt: (b, S, D); B, C: (b, S, N);
+    A: (D, N).  Returns (y (b,S,D) fp32, h_final (b,D,N) fp32)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt[..., None] * Af)                # (b, D, N)
+        h = a * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    b, s, d = x.shape
+    h0 = jnp.zeros((b, d, A.shape[-1]), jnp.float32)
+    hf, y = jax.lax.scan(step, h0, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                                    Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    return y.swapaxes(0, 1), hf

@@ -1,0 +1,96 @@
+"""Mamba1 selective scan as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): instead of the CUDA kernel's warp-level
+parallel scan, the state tile h (block_d, N) stays resident in VMEM across
+the sequential chunk grid dimension; within a chunk the recurrence runs
+time-step-by-time-step but fully vectorised over (channels x state) — the
+layout the VPU wants (channel rows x 128-wide state lanes).  HBM traffic is
+one read of (x, dt, B, C) and one write of y per token: the per-timestep
+hidden state trajectory (b, S, D, N) — the term that makes naive
+implementations memory-bound — never leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, hout_ref, h_scr, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].astype(jnp.float32)                    # (bd, N)
+    x = x_ref[0].astype(jnp.float32)                      # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)                    # (chunk, bd)
+    bmat = b_ref[0].astype(jnp.float32)                   # (chunk, N)
+    cmat = c_ref[0].astype(jnp.float32)                   # (chunk, N)
+
+    def step(t, h):
+        at = jnp.exp(dt[t][:, None] * a)                  # (bd, N)
+        h = at * h + (dt[t] * x[t])[:, None] * bmat[t][None, :]
+        o_ref[0, t, :] = (h * cmat[t][None, :]).sum(axis=-1).astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        hout_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan(x, dt, b, c, a, *, chunk: int = 64, block_d: int = 256,
+                   interpret: bool = False):
+    """x, dt: (B, S, D); b, c: (B, S, N); a: (D, N).
+
+    Returns (y (B, S, D) fp32, h_final (B, D, N) fp32)."""
+    bs, s, d = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    bd = min(block_d, d)
+    while d % bd:
+        bd -= 1
+    n_chunks = s // chunk
+    grid = (bs, d // bd, n_chunks)
+
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_fin = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, di, ci: (b_, ci, di)),
+            pl.BlockSpec((1, chunk, bd), lambda b_, di, ci: (b_, ci, di)),
+            pl.BlockSpec((1, chunk, n), lambda b_, di, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, di, ci: (b_, ci, 0)),
+            pl.BlockSpec((bd, n), lambda b_, di, ci: (di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b_, di, ci: (b_, ci, di)),
+            pl.BlockSpec((1, bd, n), lambda b_, di, ci: (b_, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bs, d, n), jnp.float32),
+        ],
+        scratch_shapes=[_scratch((bd, n))],
+        interpret=interpret,
+    )(x, dt, b, c, a)
+    return y, h_fin
+
+
+def _scratch(shape):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:                                     # pragma: no cover
+        return pl.MemorySpace.ANY(shape, jnp.float32)

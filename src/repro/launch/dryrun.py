@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell this lowers and
+compiles the real train/prefill/serve step against ShapeDtypeStruct
+stand-ins on the production mesh (16x16 single-pod, 2x16x16 multi-pod),
+prints ``compiled.memory_analysis()`` / ``cost_analysis()`` and records
+the roofline terms (structured HLO walk, launch/hlo_cost.py) to a JSON
+artifact under --out.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+V5E_PEAK_FLOPS = 197e12          # bf16 / chip
+V5E_HBM_BW = 819e9               # bytes/s / chip
+V5E_ICI_BW = 50e9                # bytes/s / link
+
+# §Perf hillclimb variants (EXPERIMENTS.md); baseline = no variant.
+PERF_VARIANTS = {
+    # MoE combine via fp32-accumulating einsum instead of materialising an
+    # fp32 (T*k, d) tensor (kills fp32 cotangents through the MoE too)
+    "moe-bf16": {"cfg": {"moe_combine_f32_materialize": False}},
+    # Megatron-style sequence parallelism for the residual stream: saved
+    # layer-boundary activations shard over the model axis
+    "seqpar": {"cfg": {"seq_shard_residuals": True}},
+    # mamba selective-scan working dtype bf16 (state carry stays fp32)
+    "scan-bf16": {"cfg": {"scan_dtype": "bfloat16"}},
+    # ZeRO-1: params replicated over data (no per-layer FSDP gathers);
+    # optimizer moments sharded over the data axis instead
+    "zero1": {"fsdp": False, "zero1": True},
+    "seqpar-zero1": {"cfg": {"seq_shard_residuals": True},
+                     "fsdp": False, "zero1": True},
+    "moe-bf16-seqpar": {"cfg": {"moe_combine_f32_materialize": False,
+                                "seq_shard_residuals": True}},
+    # index-buffer MoE dispatch: no k-times activation repeat in HBM
+    "moe-gather": {"cfg": {"moe_gather_dispatch": True}},
+    "moe-gather-bf16": {"cfg": {"moe_gather_dispatch": True,
+                                "moe_combine_f32_materialize": False}},
+    # no activation recomputation: saves the remat fwd pass (collectives,
+    # flops) at the cost of saved-activation capacity
+    "noremat": {"cfg": {"remat": False}},
+    # re-configure parallelism on the SAME mesh (the paper's own lever):
+    # pipeline parallelism over the 'model' axis, tp=1, dp over 'data'
+    "pp16": {"pp": True},
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             n_micro: int, fsdp: bool, variant: str = "",
+             tag: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from .. import configs
+    from ..models.config import SHAPES
+    from ..models.sharding import ShardCtx
+    from ..optim.adamw import AdamW
+    from . import hlo_cost, specs as SP
+    from .mesh import make_production_mesh
+    from .steps import make_decode_step, make_prefill_step, make_train_step
+    from ..core import flops as F
+
+    cfg = configs.get(arch)
+    var = PERF_VARIANTS.get(variant, {})
+    if var.get("cfg"):
+        cfg = cfg.replace(**var["cfg"])
+    if "fsdp" in var:
+        fsdp = var["fsdp"]
+    zero1 = bool(var.get("zero1"))
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_micro": n_micro, "fsdp": fsdp, "tag": tag,
+              "variant": variant}
+
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        result["skipped"] = ("pure full-attention arch: 500k dense KV cache "
+                             "excluded per assignment spec")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    dp = ("pod", "data") if multi_pod else ("data",)
+    # FSDP weight sharding only makes sense when training (serving would
+    # re-gather weights every layer)
+    use_fsdp = fsdp and shape.kind == "train"
+    ctx = ShardCtx(mesh=mesh, dp=dp, tp="model",
+                   fsdp=("data",) if use_fsdp else ())
+
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        if var.get("pp") and shape.kind == "train":
+            from .pp_step import make_pp_train_step
+            opt = AdamW(lr=1e-4)
+            step, p, o, b = make_pp_train_step(cfg, mesh, opt,
+                                               pipe_axis="model",
+                                               data_axis="data", n_mb=16)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p, o, b)
+            tokens = shape.global_batch * shape.seq_len
+            result["model_flops"] = F.model_flops(cfg, tokens, train=True)
+            result["attn_flops"] = F.attention_flops(cfg, shape.seq_len,
+                                                     tokens, train=True)
+        elif shape.kind == "train":
+            opt = AdamW(lr=1e-4)
+            step = make_train_step(cfg, ctx, opt, n_micro=n_micro)
+            p = SP.params_spec(cfg, ctx)
+            o = SP.opt_spec(cfg, ctx, opt, zero1=zero1)
+            b = SP.batch_spec(cfg, shape, ctx)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p, o, b)
+            tokens = shape.global_batch * shape.seq_len
+            result["model_flops"] = F.model_flops(cfg, tokens, train=True)
+            result["attn_flops"] = F.attention_flops(cfg, shape.seq_len,
+                                                     tokens, train=True)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, ctx)
+            p = SP.params_spec(cfg, ctx)
+            b = SP.batch_spec(cfg, shape, ctx)
+            lowered = jax.jit(step).lower(p, b)
+            tokens = shape.global_batch * shape.seq_len
+            result["model_flops"] = F.model_flops(cfg, tokens, train=False)
+            result["attn_flops"] = F.attention_flops(cfg, shape.seq_len,
+                                                     tokens, train=False)
+        else:
+            step = make_decode_step(cfg, ctx)
+            p = SP.params_spec(cfg, ctx)
+            token, cache, pos = SP.decode_inputs(cfg, shape, ctx)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                p, cache, token, pos)
+            tokens = shape.global_batch
+            result["model_flops"] = F.model_flops(cfg, tokens, train=False)
+            result["attn_flops"] = F.attention_flops(cfg, shape.seq_len,
+                                                     tokens, train=False)
+        t_lower = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        mem = compiled.memory_analysis()
+        print(f"[{arch}|{shape_name}|{mesh_name}] memory_analysis:", mem)
+        cost = compiled.cost_analysis() or {}
+        print(f"[{arch}|{shape_name}|{mesh_name}] cost_analysis flops:",
+              cost.get("flops"), "bytes:", cost.get("bytes accessed"))
+
+        t0 = time.perf_counter()
+        text = compiled.as_text()
+        costs = hlo_cost.analyze(text)
+        t_parse = time.perf_counter() - t0
+        # persist the (compressed) HLO so cost-model improvements can
+        # re-analyze without recompiling
+        try:
+            import zstandard as zstd
+            hlo_path = out_dir / (f"{arch}__{shape_name}__{mesh_name}"
+                                  + (f"-{tag}" if tag else "") + ".hlo.zst")
+            hlo_path.write_bytes(zstd.ZstdCompressor(level=6).compress(
+                text.encode()))
+        except Exception:
+            pass
+
+    per_dev_flops = costs.flops
+    per_dev_bytes = costs.bytes
+    per_dev_coll = costs.total_collective
+    result.update({
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "parse_s": round(t_parse, 2),
+        "hlo_bytes_len": len(text),
+        "xla_cost_flops_per_dev": float(cost.get("flops", 0.0) or 0.0),
+        "xla_cost_bytes_per_dev": float(cost.get("bytes accessed", 0.0) or 0.0),
+        "flops_per_dev": per_dev_flops,
+        "hbm_bytes_per_dev": per_dev_bytes,
+        "collective_bytes_per_dev": per_dev_coll,
+        "collective_bytes_native": costs.collective_bytes_native,
+        "t_collective_native": costs.collective_bytes_native / V5E_ICI_BW,
+        "collectives": {k: v for k, v in costs.collective_bytes.items()},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        # roofline terms (seconds)
+        "t_compute": per_dev_flops / V5E_PEAK_FLOPS,
+        "t_memory": per_dev_bytes / V5E_HBM_BW,
+        "t_collective": per_dev_coll / V5E_ICI_BW,
+    })
+    terms = {"compute": result["t_compute"], "memory": result["t_memory"],
+             "collective": result["t_collective"]}
+    result["bottleneck"] = max(terms, key=terms.get)
+    hlo_total = per_dev_flops * n_dev
+    result["useful_flops_ratio"] = (result["model_flops"] / hlo_total
+                                    if hlo_total else 0.0)
+    bytes_per_dev = mem.argument_size_in_bytes + mem.temp_size_in_bytes
+    result["bytes_per_device"] = bytes_per_dev
+    result["fits_v5e_16g"] = bool(bytes_per_dev <= 16 * 2 ** 30)
+    return result
+
+
+def cell_path(out_dir: Path, arch: str, shape: str, mesh: str, tag: str = "") -> Path:
+    suffix = f"-{tag}" if tag else ""
+    return out_dir / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--n-micro", type=int, default=4)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf variants")
+    ap.add_argument("--variant", default="", choices=[""] + list(PERF_VARIANTS),
+                    help="named §Perf variant (see PERF_VARIANTS)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from .. import configs
+        from ..models.config import SHAPES
+        meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+        cells = [(a, s, m) for a in configs.ARCHS for s in SHAPES
+                 for m in meshes]
+        failures = []
+        for arch, shape, mesh in cells:
+            path = cell_path(out_dir, arch, shape,
+                             "2x16x16" if mesh == "multipod" else "16x16",
+                             args.tag)
+            if path.exists() and not args.force:
+                print("skip (cached):", path.name)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", str(out_dir), "--n-micro", str(args.n_micro)]
+            if args.no_fsdp:
+                cmd.append("--no-fsdp")
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            print(">>>", " ".join(cmd[3:]))
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mesh, r.returncode))
+            except subprocess.TimeoutExpired:
+                failures.append((arch, shape, mesh, "timeout"))
+        print("failures:", failures if failures else "none")
+        return 1 if failures else 0
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    multi = args.mesh == "multipod"
+    mesh_name = "2x16x16" if multi else "16x16"
+    if args.variant and not args.tag:
+        args.tag = args.variant
+    res = run_cell(args.arch, args.shape, multi, out_dir, args.n_micro,
+                   fsdp=not args.no_fsdp, variant=args.variant, tag=args.tag)
+    path = cell_path(out_dir, args.arch, args.shape, mesh_name, args.tag)
+    path.write_text(json.dumps(res, indent=2))
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("collectives", "memory")}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,388 @@
+"""Structured cost model over compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE, so scanned
+programs (layers scan, microbatch accumulation) under-report FLOPs/bytes by
+the trip count.  This module parses the HLO text, walks the computation
+graph, multiplies loop bodies by their trip counts (recovered from the loop
+condition's comparison constant), and accounts:
+
+  * flops   — dot / convolution ops (2 * prod(out) * K),
+  * bytes   — operand + output bytes of every non-trivial op (fusions count
+              their boundary traffic only: exactly the HBM model),
+  * collectives — per-kind operand bytes of all-reduce / all-gather /
+              reduce-scatter / all-to-all / collective-permute, with ring
+              traffic multipliers.
+
+All numbers are PER DEVICE (the compiled module is the per-partition SPMD
+program); callers scale by device count where totals are needed.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$|^(?:ENTRY\s+)?%?([\w.\-]+)\s+\{")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "copy", "after-all", "partition-id", "replica-id", "iota",
+         "custom-call"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_type: str
+    operands_str: str
+    attrs: str
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    # bytes assuming native-dtype reductions: the CPU backend accumulates
+    # bf16 dots in f32 and hoists the convert past the all-reduce, doubling
+    # matmul-psum bytes vs a TPU lowering; this counts those at bf16.
+    collective_bytes_native: float = 0.0
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes_native += other.collective_bytes_native * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+
+    @property
+    def total_collective(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _split_operands_attrs(rest: str) -> Tuple[str, str]:
+    """rest starts right after the opcode's '('. Returns (operands, attrs)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            s = line.strip()
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY") or
+                                    s.startswith("%") or "(" in s):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", s)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, out_type, opcode = m.groups()
+        after = line[m.end():]
+        operands, attrs = _split_operands_attrs(after)
+        comps[cur].append(Op(name, opcode, out_type, operands, attrs))
+    return comps
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(comps: Dict[str, List[Op]], while_op: Op,
+                cond_name: Optional[str]) -> int:
+    """Trip count: prefer the scheduler's known_trip_count backend_config,
+    else the condition computation's comparison constant."""
+    m = _TRIP_RE.search(while_op.attrs)
+    if m:
+        return int(m.group(1))
+    ops = comps.get(cond_name or "", [])
+    consts = []
+    for op in ops:
+        if op.opcode == "constant":
+            mm = re.match(r"^\s*(-?\d+)\s*$", op.operands_str)
+            if mm:
+                consts.append(int(mm.group(1)))
+    pos = [v for v in consts if v > 0]
+    return max(pos) if pos else 1
+
+
+def _group_size(attrs: str, default: int = 0) -> int:
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+# ops whose HBM traffic is slice-sized, not operand-sized (XLA executes
+# them in place / as indexed access):
+#   dynamic-slice : read slice only            -> 2 * out
+#   gather        : read gathered rows only    -> 2 * out (+ indices)
+#   dynamic-update-slice: rewrite slice region -> 2 * update operand
+#   scatter       : touch update region only   -> 3 * update operand
+_INDEXED = {"dynamic-slice", "gather", "dynamic-update-slice", "scatter"}
+
+
+def _indexed_bytes(op_kind: str, out_bytes: int, operand_shapes: List[str]) -> int:
+    if op_kind in ("dynamic-slice", "gather"):
+        return 2 * out_bytes
+    if op_kind == "dynamic-update-slice":
+        upd = _shape_bytes(operand_shapes[1]) if len(operand_shapes) > 1 else out_bytes
+        return 2 * upd
+    if op_kind == "scatter":
+        upd = _shape_bytes(operand_shapes[-1]) if operand_shapes else out_bytes
+        return 3 * upd
+    return 0
+
+
+def _operand_shapes(op: Op, shapes: Dict[str, str]) -> List[str]:
+    """Operand type strings via the per-computation name -> type map
+    (the scheduled-HLO printer omits inline operand types)."""
+    inline = _SHAPE_RE.findall(op.operands_str)
+    if inline:
+        return [f"{dt}[{dims}]" for dt, dims in inline]
+    return [shapes[r] for r in _REF_RE.findall(op.operands_str) if r in shapes]
+
+
+def _operand_bytes(op: Op, shapes: Dict[str, str]) -> int:
+    return sum(_shape_bytes(s) for s in _operand_shapes(op, shapes))
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = 1
+    for d in _first_shape(op.out_type)[1]:
+        out_elems *= d
+    ops_shapes = _operand_shapes(op, shapes)
+    if not ops_shapes:
+        return 0.0
+    lhs_dims = _first_shape(ops_shapes[0])[1]
+    cm = _CONTRACT_RE.search(op.attrs)
+    k = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+_GROUPS_COUNT_RE = re.compile(r"feature_group_count=(\d+)")
+_WINDOW_RE = re.compile(r"window=\{[^}]*size=([0-9x]+)")
+_DIMLABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->")
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    """HloCostAnalysis convention: 2 * out_elems * window_prod *
+    (lhs_feature_dim / feature_group_count)."""
+    out_elems = 1
+    for d in _first_shape(op.out_type)[1]:
+        out_elems *= d
+    ops_shapes = _operand_shapes(op, shapes)
+    if not ops_shapes:
+        return 0.0
+    win = 1
+    m = _WINDOW_RE.search(op.attrs)
+    if m:
+        for w in m.group(1).split("x"):
+            win *= int(w)
+    lhs_dims = _first_shape(ops_shapes[0])[1]
+    feat = 1
+    dl = _DIMLABELS_RE.search(op.attrs)
+    if dl and "f" in dl.group(1) and len(lhs_dims) == len(dl.group(1)):
+        feat = lhs_dims[dl.group(1).index("f")]
+    g = _GROUPS_COUNT_RE.search(op.attrs)
+    groups = int(g.group(1)) if g else 1
+    return 2.0 * out_elems * win * feat / max(groups, 1)
+
+
+_RING_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _cost_of(comps: Dict[str, List[Op]], name: str,
+             memo: Dict[str, Costs]) -> Costs:
+    if name in memo:
+        return memo[name]
+    memo[name] = Costs()          # break cycles defensively
+    total = Costs()
+    shapes = {op.name: op.out_type for op in comps.get(name, [])}
+    for op in comps.get(name, []):
+        base = op.opcode
+        for c in COLLECTIVES:
+            if op.opcode.startswith(c):
+                base = c          # normalise -start/-done async forms
+                break
+        if base == "while":
+            body = _CALL_RE.search(op.attrs)
+            cond = _COND_RE.search(op.attrs)
+            trips = _trip_count(comps, op, cond.group(1) if cond else None)
+            if body:
+                total.add(_cost_of(comps, body.group(1), memo), max(trips, 1))
+            continue
+        if base == "fusion":
+            callee = _CALL_RE.search(op.attrs)
+            cname = callee.group(1) if callee else ""
+            if cname:
+                inner = _cost_of(comps, cname, memo)
+                total.flops += inner.flops
+                for k, v in inner.collective_bytes.items():
+                    total.collective_bytes[k] = total.collective_bytes.get(k, 0) + v
+            total.bytes += _fusion_bytes(op, shapes, comps.get(cname, []))
+            continue
+        if base in ("call", "conditional", "async-start"):
+            for callee in _CALL_RE.findall(op.attrs):
+                total.add(_cost_of(comps, callee, memo))
+            continue
+        if base in COLLECTIVES:
+            if op.opcode.endswith("-done"):
+                continue          # counted at -start
+            b = _operand_bytes(op, shapes) * _RING_MULT[base]
+            total.collective_bytes[base] = total.collective_bytes.get(base, 0.0) + b
+            native = b
+            if "dot_general" in op.attrs and "f32[" in op.out_type:
+                native = b / 2.0          # bf16 matmul psum upcast by CPU
+            total.collective_bytes_native += native
+            total.bytes += _operand_bytes(op, shapes) + _shape_bytes(op.out_type)
+            continue
+        if base in _SKIP:
+            continue
+        if base in _INDEXED:
+            total.bytes += _indexed_bytes(base, _shape_bytes(op.out_type),
+                                          _operand_shapes(op, shapes))
+            continue
+        if base == "dot":
+            total.flops += _dot_flops(op, shapes)
+        elif base == "convolution":
+            total.flops += _conv_flops(op, shapes)
+        total.bytes += _operand_bytes(op, shapes) + _shape_bytes(op.out_type)
+    memo[name] = total
+    return total
+
+
+def _fusion_bytes(op: Op, shapes: Dict[str, str], callee_ops: List[Op]) -> int:
+    """Boundary traffic of a fusion, with indexed access patterns counted
+    slice-sized: a parameter consumed (only) by dynamic-slice/gather reads
+    the slice; a DUS-rooted fusion whose output aliases the buffer writes
+    the update region only."""
+    operand_shapes = _operand_shapes(op, shapes)
+    out_bytes = _shape_bytes(op.out_type)
+
+    # params feeding indexed ops (through bitcast/copy/convert chains)
+    param_order: Dict[str, int] = {}
+    feeds: Dict[str, str] = {}
+    for cop in callee_ops:
+        if cop.opcode == "parameter":
+            m = re.match(r"^\s*(\d+)\s*$", cop.operands_str)
+            if m:
+                param_order[cop.name] = int(m.group(1))
+        elif cop.opcode in ("bitcast", "copy", "convert", "reshape"):
+            refs = _REF_RE.findall(cop.operands_str)
+            if refs:
+                feeds[cop.name] = refs[0]
+
+    def root_param(ref: str) -> Optional[str]:
+        seen = 0
+        while ref in feeds and seen < 10:
+            ref = feeds[ref]
+            seen += 1
+        return ref if ref in param_order else None
+
+    sliced_params: Dict[int, int] = {}       # param idx -> accessed bytes
+    dus_update_bytes = 0
+    has_dus = False
+    cshapes = {c.name: c.out_type for c in callee_ops}
+    for cop in callee_ops:
+        if cop.opcode in ("dynamic-slice", "gather"):
+            refs = _REF_RE.findall(cop.operands_str)
+            if refs:
+                p = root_param(refs[0])
+                if p is not None:
+                    idx = param_order[p]
+                    sliced_params[idx] = sliced_params.get(idx, 0) + \
+                        _shape_bytes(cop.out_type)
+        elif cop.opcode == "dynamic-update-slice":
+            has_dus = True
+            refs = _REF_RE.findall(cop.operands_str)
+            if len(refs) > 1:
+                upd_shape = cshapes.get(refs[1], "")
+                dus_update_bytes += _shape_bytes(upd_shape)
+                p = root_param(refs[0])
+                if p is not None:
+                    sliced_params[param_order[p]] = dus_update_bytes
+
+    total = 0
+    for i, s in enumerate(operand_shapes):
+        total += sliced_params.get(i, _shape_bytes(s)) if i in sliced_params \
+            else _shape_bytes(s)
+    if has_dus and dus_update_bytes and out_bytes >= dus_update_bytes:
+        total += dus_update_bytes        # in-place write of the slice region
+    else:
+        total += out_bytes
+    return total
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> Costs:
+    comps = parse_hlo(hlo_text)
+    if not comps:
+        return Costs()
+    if entry is None:
+        # entry computation is marked ENTRY in the text; find it
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+    # fusions/bodies are reachable from entry; memoised walk
+    return _cost_of(comps, entry, {})

@@ -1,0 +1,46 @@
+"""Production mesh construction (multi-pod dry-run spec) + Pipette-driven
+device permutations.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches JAX device state.  ``mesh_from_mapping`` applies a Pipette worker
+dedication (a device permutation) — the XLA device-assignment analogue of
+the paper's logical-worker -> GPU mapping f.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if devices is None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    dev = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              permutation: Optional[np.ndarray] = None):
+    """Arbitrary mesh with an optional Pipette device permutation."""
+    devs = np.array(jax.devices())
+    n = int(np.prod(shape))
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices, have {len(devs)}")
+    devs = devs[:n]
+    if permutation is not None:
+        devs = devs[np.asarray(permutation).reshape(-1)]
+    return jax.sharding.Mesh(devs.reshape(tuple(shape)), tuple(axes))
+
+
+def mesh_from_mapping(conf, mapping: np.ndarray, axes=("pipe", "model", "data")):
+    """Pipette Map (pp, tp, dp) -> Mesh whose [x, y, z] device is GPU
+    f(x, y, z).  Physical adjacency in the cluster is preserved by the
+    device order, so the mapping steers which links each axis uses."""
+    devs = np.array(jax.devices())[:conf.n_gpus]
+    return jax.sharding.Mesh(devs[mapping], tuple(axes))

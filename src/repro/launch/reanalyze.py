@@ -1,0 +1,59 @@
+"""Re-run the HLO cost model over saved .hlo.zst artifacts and refresh the
+JSON roofline terms — no recompilation.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--out artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import zstandard as zstd
+
+from . import hlo_cost
+from .dryrun import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
+
+
+def reanalyze(out_dir: Path) -> int:
+    n = 0
+    for jpath in sorted(out_dir.glob("*.json")):
+        hpath = jpath.with_suffix("").with_suffix("")  # strip .json
+        hpath = jpath.parent / (jpath.stem + ".hlo.zst")
+        if not hpath.exists():
+            continue
+        d = json.loads(jpath.read_text())
+        if "skipped" in d:
+            continue
+        text = zstd.ZstdDecompressor().decompress(hpath.read_bytes()).decode()
+        costs = hlo_cost.analyze(text)
+        d["flops_per_dev"] = costs.flops
+        d["hbm_bytes_per_dev"] = costs.bytes
+        d["collective_bytes_per_dev"] = costs.total_collective
+        d["collective_bytes_native"] = costs.collective_bytes_native
+        d["t_collective_native"] = costs.collective_bytes_native / V5E_ICI_BW
+        d["collectives"] = dict(costs.collective_bytes)
+        d["t_compute"] = costs.flops / V5E_PEAK_FLOPS
+        d["t_memory"] = costs.bytes / V5E_HBM_BW
+        d["t_collective"] = costs.total_collective / V5E_ICI_BW
+        terms = {"compute": d["t_compute"], "memory": d["t_memory"],
+                 "collective": d["t_collective"]}
+        d["bottleneck"] = max(terms, key=terms.get)
+        hlo_total = costs.flops * d["n_devices"]
+        d["useful_flops_ratio"] = (d["model_flops"] / hlo_total
+                                   if hlo_total else 0.0)
+        jpath.write_text(json.dumps(d, indent=2))
+        n += 1
+    return n
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+    n = reanalyze(Path(args.out))
+    print(f"re-analyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Sharding is attached directly to the ShapeDtypeStructs (weak-type-correct,
+shardable, no device allocation), so ``jax.jit(step).lower(**specs)``
+needs no separate in_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import SHAPES, ModelConfig, ShapeSpec
+from ..models.sharding import ShardCtx, tree_shardings
+from ..optim.adamw import AdamW
+
+
+def _sds(shape, dtype, ctx: ShardCtx, spec: P):
+    sharding = NamedSharding(ctx.mesh, spec) if ctx.mesh else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(tree_sds, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, shardings)
+
+
+def params_spec(cfg: ModelConfig, ctx: ShardCtx):
+    sds = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    if ctx.mesh is None:
+        return sds
+    return _with_shardings(sds, tree_shardings(sds, cfg, ctx))
+
+
+def opt_spec(cfg: ModelConfig, ctx: ShardCtx, opt: AdamW, *,
+             zero1: bool = False):
+    p = params_spec(cfg, ctx)
+    sds = jax.eval_shape(opt.init, p)
+    if ctx.mesh is None:
+        return sds
+    # m/v inherit the param shardings; step is replicated
+    pshard = jax.tree.map(lambda s: s.sharding, p)
+    if zero1:
+        # ZeRO-1: shard the fp32 moments over the data axis on the largest
+        # still-unsharded dim (params themselves stay data-replicated)
+        def z1_for(s_leaf, sh):
+            parts = list(sh.spec) + [None] * (len(s_leaf.shape) - len(sh.spec))
+            used = {a for pp_ in parts if pp_ is not None
+                    for a in ((pp_,) if isinstance(pp_, str) else pp_)}
+            if "data" not in used:
+                cands = [i for i, ax in enumerate(parts) if ax is None
+                         and s_leaf.shape[i] % ctx.n("data") == 0]
+                if cands:
+                    big = max(cands, key=lambda i: s_leaf.shape[i])
+                    parts[big] = "data"
+            return NamedSharding(ctx.mesh, P(*parts))
+        pshard = jax.tree.map(z1_for, sds.m, pshard)
+    rep = NamedSharding(ctx.mesh, P())
+    return type(sds)(
+        step=jax.ShapeDtypeStruct(sds.step.shape, sds.step.dtype, sharding=rep),
+        m=_with_shardings(sds.m, pshard),
+        v=_with_shardings(sds.v, pshard))
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardCtx) -> Dict[str, Any]:
+    dp = P(ctx.dp if ctx.dp else None)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "vlm":
+        s_text = s - cfg.n_img_tokens
+        out["tokens"] = _sds((b, s_text), jnp.int32, ctx, dp)
+        out["img_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model),
+                                 jnp.bfloat16, ctx, P(dp[0], None, None))
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, ctx, dp)
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32, ctx, dp)
+    return out
+
+
+def cache_spec(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardCtx):
+    sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    if ctx.mesh is None:
+        return sds
+    pspecs = M.cache_pspecs(cfg, ctx, shape.global_batch)
+    out = {}
+    for k, v in sds.items():
+        spec = pspecs.get(k, P())
+        parts = list(spec)[:len(v.shape)]
+        while len(parts) < len(v.shape):
+            parts.append(None)
+        # drop non-dividing axes
+        clean = []
+        for dim, ax in zip(v.shape, parts):
+            if ax is None:
+                clean.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            n = 1
+            for a in axes:
+                n *= ctx.n(a)
+            clean.append(ax if dim % n == 0 else None)
+        out[k] = jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=NamedSharding(ctx.mesh, P(*clean)))
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardCtx) -> Tuple:
+    b = shape.global_batch
+    nd = 1
+    for a in (ctx.dp or ()):
+        nd *= ctx.n(a)
+    tok_spec = P(ctx.dp) if (ctx.mesh and b % max(nd, 1) == 0 and nd > 1) else P(None)
+    token = _sds((b, 1), jnp.int32, ctx, tok_spec)
+    cache = cache_spec(cfg, shape, ctx)
+    pos = _sds((), jnp.int32, ctx, P())
+    return token, cache, pos

@@ -1,0 +1,83 @@
+"""Shared layer math: norms, RoPE, activations, initializers.
+
+Pure functions over explicit parameter pytrees (no framework).  Norms and
+softmax-adjacent reductions run in fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = silu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta) -> jax.Array:
+    """Inverse frequencies (head_dim//2,). ``theta`` may be a traced scalar."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (jnp.asarray(theta, jnp.float32) ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by position-dependent angles.
+
+    ``positions``: (..., seq) int32.  Uses the interleaved-pair convention
+    folded into the rotate-half layout (matches Llama-style checkpoints
+    numerically up to a fixed permutation, which is irrelevant here because
+    we train from scratch).
+    """
+    dtype = x.dtype
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]                                    # (..., S, 1, hd/2)
+    cos = cos[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (explicit shapes; return stacked (L, ...) arrays when n is set)
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, n: int = 0, dtype=jnp.bfloat16):
+    shape = (n, d_in, d_out) if n else (d_in, d_out)
+    return _normal(key, shape, 1.0 / np.sqrt(d_in), dtype)
+
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.bfloat16):
+    return _normal(key, (vocab, d), 1.0, dtype)
+
+
+def zeros(shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype)

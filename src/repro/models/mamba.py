@@ -1,0 +1,249 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks.
+
+TPU adaptation notes (DESIGN.md §2):
+  * Mamba1 uses a chunked first-order associative scan: only one
+    (b, Q, d_inner, N) tile is live per chunk, and d_inner is sharded over
+    the model axis, so the per-device working set stays VMEM-sized.  The
+    Pallas kernel (kernels/selective_scan.py) implements the same chunking
+    with explicit BlockSpecs.
+  * Mamba2 uses the SSD dual form: within-chunk (Q x Q) decay-masked
+    attention-like matmuls (MXU-friendly) + a cheap inter-chunk state
+    recurrence.  State (b, H, P, N) never materialises a per-timestep
+    trajectory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import silu, rms_norm
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """x: (B, S, C); w: (W, C) depthwise; left-padded causal conv."""
+    width, c = w.shape
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    kernel = w[:, None, :].astype(x.dtype)           # (W, 1, C)
+    y = jax.lax.conv_general_dilated(
+        xp, kernel, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def causal_conv1d_step(x_t: jax.Array, cache: jax.Array, w: jax.Array,
+                       b: jax.Array | None = None):
+    """One decode step.  x_t: (B, C); cache: (B, W-1, C) past inputs."""
+    window = jnp.concatenate([cache, x_t[:, None]], axis=1)       # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    new_cache = window[:, 1:]
+    return y.astype(x_t.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 selective scan (chunked associative scan)
+# ---------------------------------------------------------------------------
+
+def selective_scan(x, dt, B, C, A, *, h0=None, chunk: int = 128,
+                   work_dtype=jnp.float32):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+
+    x, dt: (b, S, D);  B, C: (b, S, N);  A: (D, N) (negative real).
+    Returns y (b, S, D) fp32 and final state (b, D, N) fp32.
+    """
+    b, s, d = x.shape
+    n = B.shape[-1]
+    q = _pick_chunk(s, chunk)
+    nc = s // q
+
+    xc = x.astype(jnp.float32).reshape(b, nc, q, d).swapaxes(0, 1)
+    dtc = dt.astype(jnp.float32).reshape(b, nc, q, d).swapaxes(0, 1)
+    Bc = B.astype(jnp.float32).reshape(b, nc, q, n).swapaxes(0, 1)
+    Cc = C.astype(jnp.float32).reshape(b, nc, q, n).swapaxes(0, 1)
+    A32 = A.astype(jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_body(h, xs):
+        xq, dtq, bq, cq = xs
+        a = jnp.exp(dtq[..., None] * A32).astype(work_dtype)      # (b,q,d,n)
+        u = ((dtq * xq)[..., None] * bq[:, :, None, :]).astype(work_dtype)
+        a_cum, u_scan = jax.lax.associative_scan(combine, (a, u), axis=1)
+        h_all = a_cum.astype(jnp.float32) * h[:, None] \
+            + u_scan.astype(jnp.float32)                          # (b,q,d,n)
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, cq)
+        return h_all[:, -1], y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+    h_fin, yc = jax.lax.scan(chunk_body, h0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(b, s, d)
+    return y, h_fin
+
+
+def selective_scan_step(x, dt, B, C, A, h):
+    """One decode step.  x, dt: (b, D); B, C: (b, N); h: (b, D, N)."""
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    h_new = a * h + (dt * x).astype(jnp.float32)[..., None] * B[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h_new, C.astype(jnp.float32))
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (chunked dual form)
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, B, C, A, *, h0=None, chunk: int = 128):
+    """Mamba2 state-space dual scan.
+
+    x: (b, S, H, P); dt: (b, S, H); B, C: (b, S, N) (single group);
+    A: (H,) negative real.  Returns y (b, S, H, P) fp32, final state
+    (b, H, P, N) fp32.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = _pick_chunk(s, chunk)
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p).swapaxes(0, 1)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h).swapaxes(0, 1)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, n).swapaxes(0, 1)
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, n).swapaxes(0, 1)
+    A32 = A.astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    def chunk_body(state, xs):
+        xq, dtq, bq, cq = xs                                      # per-chunk
+        loga = dtq * A32                                          # (b,q,h)
+        l = jnp.cumsum(loga, axis=1)                              # inclusive
+        # decay(j -> i) = exp(l_i - l_j), j <= i; mask inside the exponent
+        # (a masked exp(+big) would overflow to inf and 0*inf = NaN)
+        delta = l[:, :, None, :] - l[:, None, :, :]               # (b,i,j,h)
+        delta = jnp.where(causal[None, :, :, None] > 0, delta, -jnp.inf)
+        decay = jnp.exp(delta)
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)                   # (b,q,q)
+        m = cb[..., None] * decay                                 # (b,i,j,h)
+        xdt = xq * dtq[..., None]                                 # (b,q,h,p)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xdt)
+        # inter-chunk: h_i gets exp(l_i) * state
+        y_inter = jnp.exp(l)[..., None] * jnp.einsum("bhpn,bin->bihp", state, cq)
+        # state update: h_last = exp(l_last) state + sum_j exp(l_last - l_j) dt_j x_j B_j
+        tail = jnp.exp(l[:, -1:, :] - l)                          # (b,q,h)
+        s_new = jnp.exp(l[:, -1])[:, :, None, None] * state + \
+            jnp.einsum("bjhp,bjn,bjh->bhpn", xq, bq, dtq * tail)
+        return s_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_fin, yc = jax.lax.scan(chunk_body, h0, (xf, dtf, Bf, Cf))
+    y = yc.swapaxes(0, 1).reshape(b, s, h, p)
+    return y, s_fin
+
+
+def ssd_step(x, dt, B, C, A, state):
+    """One decode step.  x: (b,H,P); dt: (b,H); B,C: (b,N); state: (b,H,P,N)."""
+    a = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (b,H)
+    upd = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+                     B.astype(jnp.float32))
+    s_new = a[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, C.astype(jnp.float32))
+    return y, s_new
+
+
+# ---------------------------------------------------------------------------
+# Full blocks (projections + conv + scan + gate)
+# ---------------------------------------------------------------------------
+
+def mamba1_block(x, p, cfg, *, h0=None, conv0=None, single_step=False):
+    """x: (B, S, d_model) or (B, d_model) when single_step.
+
+    Params ``p``: in_proj (d, 2*di), conv_w (W, di), conv_b (di,),
+    x_proj (di, dt_rank+2N), dt_w (dt_rank, di), dt_bias (di,),
+    A_log (di, N), D (di,), out_proj (di, d).
+    Returns (y, (h, conv_cache)).
+    """
+    di, n = cfg.d_inner, cfg.ssm_state
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if single_step:
+        xz = x @ p["in_proj"]
+        xi, z = jnp.split(xz, 2, axis=-1)                         # (B, di)
+        xi, conv_cache = causal_conv1d_step(xi, conv0, p["conv_w"], p["conv_b"])
+        xi = silu(xi)
+        proj = xi @ p["x_proj"]
+        dt, B_, C_ = jnp.split(proj, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+        dt = jax.nn.softplus(dt @ p["dt_w"] + p["dt_bias"].astype(dt.dtype))
+        y, h = selective_scan_step(xi, dt, B_, C_, A, h0)
+        y = y + p["D"].astype(jnp.float32) * xi.astype(jnp.float32)
+        y = (y * silu(z.astype(jnp.float32)))
+        return (y.astype(x.dtype) @ p["out_proj"]), (h, conv_cache)
+
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                             # (B, S, di)
+    conv_tail = xi[:, -(cfg.ssm_conv - 1):, :]                    # decode cache
+    xi = causal_conv1d(xi, p["conv_w"], p["conv_b"])
+    xi = silu(xi)
+    proj = xi @ p["x_proj"]
+    dt, B_, C_ = jnp.split(proj, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_w"] + p["dt_bias"].astype(dt.dtype))
+    y, h = selective_scan(xi, dt, B_, C_, A, h0=h0,
+                          work_dtype=jnp.dtype(cfg.scan_dtype))
+    y = y + p["D"].astype(jnp.float32) * xi.astype(jnp.float32)
+    y = y * silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype) @ p["out_proj"]), (h, conv_tail)
+
+
+def mamba2_block(x, p, cfg, *, h0=None, conv0=None, single_step=False):
+    """Mamba2/SSD block.  Params ``p``: in_proj (d, 2*di+2N+H), conv_w
+    (W, di+2N), conv_b, A_log (H,), D (H,), dt_bias (H,), norm_w (di,),
+    out_proj (di, d)."""
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    zxbcdt = x @ p["in_proj"]
+    splits = [di, 2 * di, 2 * di + n, 2 * di + 2 * n]
+    z, xi, B_, C_, dt = jnp.split(zxbcdt, splits, axis=-1)
+
+    if single_step:
+        xbc = jnp.concatenate([xi, B_, C_], axis=-1)              # (B, di+2N)
+        xbc, conv_cache = causal_conv1d_step(xbc, conv0, p["conv_w"], p["conv_b"])
+        xbc = silu(xbc)
+        xi, B_, C_ = jnp.split(xbc, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))  # (B, H)
+        xh = xi.reshape(*xi.shape[:-1], nh, hd)
+        y, h = ssd_step(xh, dt, B_, C_, A, h0)
+        y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+        y = y.reshape(*y.shape[:-2], di)
+        y = rms_norm(y * silu(z.astype(jnp.float32)), p["norm_w"], cfg.norm_eps)
+        return (y.astype(x.dtype) @ p["out_proj"]), (h, conv_cache)
+
+    xbc = jnp.concatenate([xi, B_, C_], axis=-1)
+    conv_tail = xbc[:, -(cfg.ssm_conv - 1):, :]                   # decode cache
+    xbc = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    xbc = silu(xbc)
+    xi, B_, C_ = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))      # (B, S, H)
+    xh = xi.reshape(*xi.shape[:-1], nh, hd)
+    y, h = ssd_scan(xh, dt, B_, C_, A, h0=h0)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:-2], di)
+    y = rms_norm(y * silu(z.astype(jnp.float32)), p["norm_w"], cfg.norm_eps)
+    return (y.astype(x.dtype) @ p["out_proj"]), (h, conv_tail)

@@ -1,0 +1,182 @@
+"""Top-k MoE with capacity-based, sort-free dispatch.
+
+Sharding strategy (TPU-native adaptation, see DESIGN.md §2):
+  * activations are sharded over the data axes and *replicated* over the
+    model axis (standard replicated-activation TP),
+  * expert weights are sharded E -> model axis (expert parallelism) and
+    optionally d_ff -> data axis (FSDP),
+  * under ``shard_map`` every device routes its data-shard's tokens to the
+    experts it owns — no all-to-all is needed; the per-token combine is a
+    single psum over the model axis (same bytes as one TP all-reduce).
+
+Dispatch is one-hot + cumsum (no sort): slot-within-expert comes from an
+exclusive running count, tokens beyond capacity are dropped (standard
+capacity semantics; tests use capacity_factor=8 to compare exactly against
+the dense oracle).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import silu
+
+
+def router_topk(x, w_router, k: int):
+    """Softmax-normalised top-k gates.  x: (T, d) -> (T, k) ids + gates."""
+    logits = (x.astype(jnp.float32) @ w_router.astype(jnp.float32))
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(gates_all, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return ids.astype(jnp.int32), gates
+
+
+def _capacity(n_tokens: int, k: int, n_experts: int, cf: float) -> int:
+    return max(4, int(-(-n_tokens * k * cf // n_experts)))
+
+
+def moe_apply_local(
+    x,                       # (T, d) tokens owned by this shard
+    w_router,                # (d, E) replicated
+    w_gate, w_up,            # (E_loc, d, f)
+    w_down,                  # (E_loc, f, d)
+    *,
+    k: int,
+    n_experts: int,          # global E
+    expert_offset,           # first expert id owned by this shard
+    capacity_factor: float,
+    f32_combine: bool = True,
+    gather_dispatch: bool = False,
+) -> jax.Array:
+    """Routes all local tokens, computes only the local expert slice.
+
+    Returns this shard's partial output (T, d); summing partials over all
+    expert shards yields the full MoE output.
+
+    ``gather_dispatch`` (§Perf): scatter token *indices* into the capacity
+    buffer and gather activations, instead of materialising the k-times
+    repeated activations and scatter-adding them — HBM traffic for the
+    dispatch drops from O(T*k*d) to O(E*cap*d).
+    """
+    t, d = x.shape
+    e_loc = w_gate.shape[0]
+    cap = _capacity(t, k, n_experts, capacity_factor)
+
+    ids, gates = router_topk(x, w_router, k)          # (T, k)
+    flat_ids = ids.reshape(-1)                        # (T*k,)
+    flat_gates = gates.reshape(-1)
+
+    local_ids = flat_ids - expert_offset              # (T*k,) may be out of range
+    onehot = jax.nn.one_hot(local_ids, e_loc, dtype=jnp.int32)   # 0 rows if not ours
+    # exclusive running count of the *assigned* expert -> slot within expert
+    excl = jnp.cumsum(onehot, axis=0) - onehot                   # (T*k, E_loc)
+    slot = (excl * onehot).sum(axis=-1)                          # (T*k,)
+    mine = (local_ids >= 0) & (local_ids < e_loc)
+    keep = mine & (slot < cap)
+
+    safe_e = jnp.where(keep, local_ids, 0)
+    safe_s = jnp.where(keep, slot, 0)
+
+    if gather_dispatch:
+        sentinel = t * k
+        flat_pos = jnp.where(keep, jnp.arange(t * k, dtype=jnp.int32),
+                             sentinel)
+        pos_buf = jnp.full((e_loc, cap), sentinel, jnp.int32)
+        pos_buf = pos_buf.at[safe_e, safe_s].min(flat_pos, mode="drop")
+        valid = pos_buf < sentinel
+        tok_idx = jnp.minimum(pos_buf // k, t - 1)
+        buf = jnp.where(valid[..., None], x[tok_idx], 0)
+    else:
+        xk = jnp.repeat(x, k, axis=0)                 # (T*k, d)
+        contrib = jnp.where(keep[:, None], xk, 0)
+        buf = jnp.zeros((e_loc, cap, d), x.dtype)
+        buf = buf.at[safe_e, safe_s].add(contrib, mode="drop")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y_buf = jnp.einsum("ecf,efd->ecd", silu(h) * u, w_down)      # (E_loc, cap, d)
+
+    y_rows = y_buf[safe_e, safe_s]                    # (T*k, d)
+    y_rows = jnp.where(keep[:, None], y_rows, 0)
+    if f32_combine:
+        # baseline: materialises an fp32 (T*k, d) tensor (and fp32
+        # cotangents through the MoE) — §Perf iteration 1 removes this
+        y = (y_rows.astype(jnp.float32) * flat_gates[:, None]) \
+            .reshape(t, k, d).sum(1)
+    else:
+        y = jnp.einsum("tkd,tk->td", y_rows.reshape(t, k, d),
+                       flat_gates.reshape(t, k).astype(y_rows.dtype),
+                       preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def moe_block(
+    x,                       # (B, S, d) global
+    params,                  # dict: router (d,E), gate/up (E,d,f), down (E,f,d)
+    *,
+    k: int,
+    n_experts: int,
+    capacity_factor: float,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    data_axes: Sequence[str] = (),
+    model_axis: str = "model",
+    fsdp: bool = False,
+    f32_combine: bool = True,
+    gather_dispatch: bool = False,
+) -> jax.Array:
+    """MoE layer.  With a mesh, runs the shard_map EP path; otherwise local."""
+    b, s, d = x.shape
+
+    if mesh is None:
+        y = moe_apply_local(
+            x.reshape(-1, d), params["router"], params["gate"], params["up"],
+            params["down"], k=k, n_experts=n_experts, expert_offset=0,
+            capacity_factor=capacity_factor, f32_combine=f32_combine,
+            gather_dispatch=gather_dispatch)
+        return y.reshape(b, s, d)
+
+    da = tuple(data_axes)
+    ma = model_axis
+    n_model = mesh.shape[ma]
+    # pad the expert dim to the EP axis (granite: 40 -> 48); the router never
+    # routes to padded slots, so the math is exact and the published param
+    # count is untouched.
+    e_pad = -(-n_experts // n_model) * n_model
+    w_gate, w_up, w_down = params["gate"], params["up"], params["down"]
+    if e_pad != n_experts:
+        pad = e_pad - n_experts
+        zpad = lambda w: jnp.concatenate(
+            [w, jnp.zeros((pad,) + w.shape[1:], w.dtype)], axis=0)
+        w_gate, w_up, w_down = zpad(w_gate), zpad(w_up), zpad(w_down)
+    e_per = e_pad // n_model
+
+    x_spec = P(da, None, None)
+    w3_spec = P(ma, None, da if fsdp else None)      # (E, d, f)
+    wd_spec = P(ma, da if fsdp else None, None)      # (E, f, d)
+
+    def body(x_loc, w_router, w_gate, w_up, w_down):
+        if fsdp:
+            for ax in reversed(da):
+                w_gate = jax.lax.all_gather(w_gate, ax, axis=2, tiled=True)
+                w_up = jax.lax.all_gather(w_up, ax, axis=2, tiled=True)
+                w_down = jax.lax.all_gather(w_down, ax, axis=1, tiled=True)
+        my = jax.lax.axis_index(ma) * e_per
+        bl, sl, _ = x_loc.shape
+        y = moe_apply_local(
+            x_loc.reshape(-1, d), w_router, w_gate, w_up, w_down,
+            k=k, n_experts=n_experts, expert_offset=my,
+            capacity_factor=capacity_factor, f32_combine=f32_combine,
+            gather_dispatch=gather_dispatch)
+        y = jax.lax.psum(y, ma)
+        return y.reshape(bl, sl, d)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), w3_spec, w3_spec, wd_spec),
+        out_specs=x_spec,
+        check_vma=False,
+    )
+    return fn(x, params["router"], w_gate, w_up, w_down)

@@ -1,0 +1,132 @@
+"""Sharding policy: logical partition specs for params/activations.
+
+Rules (DESIGN.md §2, §5):
+  * TP ("model" axis): attention heads (fall back to head_dim when the head
+    count does not divide the axis — every assigned arch has head_dim % 16
+    == 0), MLP hidden, expert dim, vocab.
+  * FSDP ("data" axis, never "pod" — cross-pod all-gathers would ride the
+    slow DCN): the d_model-ish dim of each weight.
+  * Activations: batch over ("pod","data"); residual stream replicated over
+    "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ()          # batch axes, e.g. ("pod", "data")
+    tp: str = ""                      # model axis
+    fsdp: Tuple[str, ...] = ()        # weight-shard axes (subset of dp)
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def n(self, axis: str) -> int:
+        return self.mesh.shape[axis] if self.mesh else 1
+
+    def constrain(self, x, spec: P):
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def _div(dim: int, ctx: ShardCtx, axis) -> bool:
+    if not ctx.active or not axis:
+        return False
+    ns = ctx.n(axis) if isinstance(axis, str) else 1
+    if not isinstance(axis, str):
+        for a in axis:
+            ns *= ctx.n(a)
+    return dim % ns == 0
+
+
+def head_specs(ctx: ShardCtx, n_heads: int, head_dim: int, layer_stacked: bool):
+    """(wq-like) (L, d, H, hd): put 'model' on H when it divides the axis.
+
+    When it does not (granite 24H, qwen1.5 20H on a 16-way axis) the heads
+    stay REPLICATED over the model axis: sharding head_dim instead would
+    turn every attention score block into a model-axis all-reduce
+    (contraction over hd), which dominates the step.  Head-padding is the
+    beyond-paper alternative evaluated in EXPERIMENTS.md §Perf."""
+    lead = (None,) if layer_stacked else ()
+    f = ctx.fsdp if ctx.fsdp else None
+    if _div(n_heads, ctx, ctx.tp):
+        return P(*lead, f, ctx.tp, None), P(*lead, ctx.tp, None, f)   # in-proj, out-proj
+    return P(*lead, f, None, None), P(*lead, None, None, f)
+
+
+def param_spec(name: str, shape, cfg, ctx: ShardCtx) -> P:
+    """Partition spec for one named parameter (leaf names are unique)."""
+    if not ctx.active:
+        return P()
+    t, f = ctx.tp, (ctx.fsdp if ctx.fsdp else None)
+    L = (None,)  # stacked-layer leading dim
+    nm = ctx.n(t)
+    hs_in, hs_out = head_specs(ctx, cfg.n_heads or 1, cfg.hd or 1, True)
+
+    table = {
+        # embeddings / head (padded_vocab always divides the model axis)
+        "tok_embed": P(t, f),
+        "lm_head": P(f, t),
+        "final_norm": P(None),
+        # attention (stacked)
+        "wq": hs_in, "wk": hs_in, "wv": hs_in, "wo": hs_out,
+        "bq": P(*L, None, None), "bk": P(*L, None, None), "bv": P(*L, None, None),
+        "ln1": P(*L, None), "ln2": P(*L, None),
+        # dense mlp
+        "gate": P(*L, f, t), "up": P(*L, f, t), "down": P(*L, t, f),
+        # moe
+        "router": P(*L, None, None),
+        "e_gate": P(*L, t, None, f), "e_up": P(*L, t, None, f),
+        "e_down": P(*L, t, f, None),
+        # mamba
+        "in_proj": P(*L, f, t), "out_proj": P(*L, t, f),
+        "conv_w": P(*L, None, t), "conv_b": P(*L, t),
+        "x_proj": P(*L, t, None), "dt_w": P(*L, None, t), "dt_bias": P(*L, t),
+        "A_log": P(*L, t, None) if name == "A_log" and len(shape) == 3 else P(*L, t),
+        "D": P(*L, t), "norm_w": P(*L, t),
+    }
+    if name in table:
+        spec = table[name]
+        # trim/pad to rank
+        parts = list(spec)
+        if len(parts) > len(shape):
+            parts = parts[len(parts) - len(shape):]
+        while len(parts) < len(shape):
+            parts.append(None)
+        # drop axes that do not divide
+        clean = []
+        for dim, ax in zip(shape, parts):
+            if ax is None:
+                clean.append(None)
+            else:
+                axes = (ax,) if isinstance(ax, str) else tuple(ax)
+                n = 1
+                for a in axes:
+                    n *= ctx.n(a)
+                clean.append(ax if dim % n == 0 else None)
+        return P(*clean)
+    return P(*([None] * len(shape)))
+
+
+def tree_pspecs(params, cfg, ctx: ShardCtx):
+    """Map leaf name -> PartitionSpec across an arbitrarily nested dict."""
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        return param_spec(prefix, node.shape, cfg, ctx)
+    return walk(params, "")
+
+
+def tree_shardings(params, cfg, ctx: ShardCtx):
+    specs = tree_pspecs(params, cfg, ctx)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

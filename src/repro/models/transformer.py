@@ -1,0 +1,343 @@
+"""Decoder stack covering dense / MoE / SSM / hybrid families.
+
+Training & prefill lower as a single ``lax.scan`` over stacked layer
+parameters (+ per-layer remat), keeping the HLO compact enough to compile
+512-way GSPMD partitions.  Decode is an unrolled loop so heterogeneous
+per-layer caches (full KV vs ring-buffer vs SSM state) stay exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import mamba as mam
+from .attention import chunked_attention, decode_attention
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, ones, rms_norm, swiglu, zeros
+from .moe import moe_block
+from .sharding import ShardCtx
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> List[Dict[str, Any]]:
+    """Static per-layer description (kind, cache slot, window, theta)."""
+    plan = []
+    full_rows = ring_rows = ssm_rows = 0
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm" or (cfg.family == "hybrid"):
+            kind = cfg.ssm_variant or "mamba1"
+            entry = {"kind": kind, "ssm_row": ssm_rows, "window": 0, "theta": cfg.rope_theta}
+            ssm_rows += 1
+        elif cfg.family == "moe":
+            entry = {"kind": "moe", "window": cfg.layer_window(i),
+                     "theta": cfg.rope_theta}
+        else:
+            entry = {"kind": "attn", "window": cfg.layer_window(i),
+                     "theta": cfg.rope_theta}
+        if entry["kind"] in ("attn", "moe"):
+            if cfg.local_global_period and cfg.layer_is_global_attn(i) and cfg.rope_theta_global:
+                entry["theta"] = cfg.rope_theta_global
+            if entry["window"] > 0:
+                entry["cache"] = ("ring", ring_rows, entry["window"])
+                ring_rows += 1
+            else:
+                entry["cache"] = ("full", full_rows)
+                full_rows += 1
+        plan.append(entry)
+    # zamba2-style shared attention applications
+    shared_at = []
+    if cfg.hybrid_attn_period:
+        shared_at = [i for i in range(cfg.n_layers)
+                     if i % cfg.hybrid_attn_period == cfg.hybrid_attn_period - 1]
+    return plan, {"full": full_rows, "ring": ring_rows, "ssm": ssm_rows,
+                  "shared_at": shared_at}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig, n: int, dtype):
+    ks = jax.random.split(key, 8)
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, n=n, dtype=dtype).reshape((n, d, h, hd) if n else (d, h, hd)),
+        "wk": dense_init(ks[1], d, kv * hd, n=n, dtype=dtype).reshape((n, d, kv, hd) if n else (d, kv, hd)),
+        "wv": dense_init(ks[2], d, kv * hd, n=n, dtype=dtype).reshape((n, d, kv, hd) if n else (d, kv, hd)),
+        "wo": dense_init(ks[3], h * hd, d, n=n, dtype=dtype).reshape((n, h, hd, d) if n else (h, hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((n, h, hd) if n else (h, hd), dtype)
+        p["bk"] = zeros((n, kv, hd) if n else (kv, hd), dtype)
+        p["bv"] = zeros((n, kv, hd) if n else (kv, hd), dtype)
+    return p
+
+
+def _mlp_init(key, cfg: ModelConfig, n: int, dtype):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {"gate": dense_init(ks[0], d, f, n=n, dtype=dtype),
+            "up": dense_init(ks[1], d, f, n=n, dtype=dtype),
+            "down": dense_init(ks[2], f, d, n=n, dtype=dtype)}
+
+
+def _moe_init(key, cfg: ModelConfig, n: int, dtype):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    shape3 = lambda a: (n, e) + a if n else (e,) + a
+    import numpy as _np
+    def einit(k, din, dout):
+        x = jax.random.normal(k, shape3((din, dout)), jnp.float32)
+        return (x / _np.sqrt(din)).astype(dtype)
+    return {"router": dense_init(ks[0], d, e, n=n, dtype=jnp.float32),
+            "e_gate": einit(ks[1], d, f), "e_up": einit(ks[2], d, f),
+            "e_down": einit(ks[3], f, d)}
+
+
+def _mamba_init(key, cfg: ModelConfig, n: int, dtype):
+    ks = jax.random.split(key, 10)
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    W = cfg.ssm_conv
+    lead = (n,) if n else ()
+    if cfg.ssm_variant == "mamba2":
+        nh = cfg.n_ssm_heads
+        conv_dim = di + 2 * N
+        return {
+            "in_proj": dense_init(ks[0], d, 2 * di + 2 * N + nh, n=n, dtype=dtype),
+            "conv_w": dense_init(ks[1], W, conv_dim, n=n, dtype=dtype),
+            "conv_b": zeros(lead + (conv_dim,), dtype),
+            "A_log": jnp.broadcast_to(jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)), lead + (nh,)),
+            "D": ones(lead + (nh,), jnp.float32),
+            "dt_bias": zeros(lead + (nh,), jnp.float32),
+            "norm_w": ones(lead + (di,), dtype),
+            "out_proj": dense_init(ks[2], di, d, n=n, dtype=dtype),
+        }
+    dtr = cfg.dt_rank
+    a0 = jnp.broadcast_to(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), lead + (di, N))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, n=n, dtype=dtype),
+        "conv_w": dense_init(ks[1], W, di, n=n, dtype=dtype),
+        "conv_b": zeros(lead + (di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * N, n=n, dtype=dtype),
+        "dt_w": dense_init(ks[3], dtr, di, n=n, dtype=dtype),
+        "dt_bias": zeros(lead + (di,), jnp.float32),
+        "A_log": a0,
+        "D": ones(lead + (di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, n=n, dtype=dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    n = cfg.n_layers
+    vp = cfg.padded_vocab
+    vmask = (jnp.arange(vp) < cfg.vocab_size)
+    params: Dict[str, Any] = {
+        "tok_embed": dense_init(keys[0], vp, cfg.d_model, dtype=dtype)
+        * vmask[:, None].astype(dtype),
+        "final_norm": ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, vp, dtype=dtype) \
+            * vmask[None, :].astype(dtype)
+
+    layers: Dict[str, Any] = {"ln1": ones((n, cfg.d_model), dtype)}
+    if cfg.family in ("dense", "vlm", "audio"):
+        layers.update(_attn_init(keys[2], cfg, n, dtype))
+        layers["ln2"] = ones((n, cfg.d_model), dtype)
+        layers.update(_mlp_init(keys[3], cfg, n, dtype))
+    elif cfg.family == "moe":
+        layers.update(_attn_init(keys[2], cfg, n, dtype))
+        layers["ln2"] = ones((n, cfg.d_model), dtype)
+        layers.update(_moe_init(keys[3], cfg, n, dtype))
+    elif cfg.family in ("ssm", "hybrid"):
+        layers.update(_mamba_init(keys[2], cfg, n, dtype))
+    params["layers"] = layers
+
+    if cfg.hybrid_attn_period:
+        shared = {"ln1": ones((cfg.d_model,), dtype)}
+        shared.update(_attn_init(keys[4], cfg, 0, dtype))
+        shared["ln2"] = ones((cfg.d_model,), dtype)
+        shared.update(_mlp_init(keys[5], cfg, 0, dtype))
+        params["shared"] = shared
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(x, p, cfg, positions, theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_block(x, p, cfg, ctx: ShardCtx, positions, window, theta):
+    """Full-sequence attention.  Returns (out, (k, v)) for cache capture.
+
+    When the head count divides the model axis, heads are TP-sharded by
+    weight-sharding propagation.  Otherwise (granite 24H, qwen1.5 20H on a
+    16-way axis) the q-block dim is sharded over the model axis instead —
+    sequence/context parallelism with replicated KV."""
+    q, k, v = _proj_qkv(x, p, cfg, positions, theta)
+    bc = None
+    min_blocks = 1
+    if ctx.active and cfg.n_heads % ctx.n(ctx.tp) != 0:
+        n_model = ctx.n(ctx.tp)
+        if q.shape[1] % n_model == 0 and q.shape[1] >= n_model:
+            min_blocks = n_model
+
+            def bc(t, dim):
+                spec = [None] * t.ndim
+                spec[0] = ctx.dp if ctx.dp else None
+                spec[dim] = ctx.tp
+                return ctx.constrain(t, P(*spec))
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          min_q_blocks=min_blocks, block_constrain=bc)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def mlp_block(x, p):
+    return swiglu(x, p["gate"], p["up"], p["down"])
+
+
+def shared_attn_apply(x, shared, cfg, ctx, positions, theta):
+    h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+    a, _ = attn_block(h, shared, cfg, ctx, positions, 0, theta)
+    x = x + a
+    h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+    return x + mlp_block(h, shared)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill): scan over layers
+# ---------------------------------------------------------------------------
+
+def _residual_spec(ctx: ShardCtx, cfg=None) -> P:
+    if cfg is not None and cfg.seq_shard_residuals:
+        # Megatron-style sequence parallelism for the residual stream /
+        # saved layer-boundary activations (§Perf): GSPMD inserts
+        # all-gather at QKV and reduce-scatter after the out-projections
+        return P(ctx.dp if ctx.dp else None, ctx.tp, None)
+    return P(ctx.dp if ctx.dp else None, None, None)
+
+
+def _layer_body(cfg: ModelConfig, ctx: ShardCtx, collect_cache: bool):
+    """Returns body(x, (lp, window, theta, positions)) -> (x, cache_ys)."""
+
+    def body(x, lp, window, theta, positions):
+        x = ctx.constrain(x, _residual_spec(ctx, cfg))
+        kind = cfg.family
+        cache_ys = ()
+        if kind in ("dense", "vlm", "audio", "moe"):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kv_cache = attn_block(h, lp, cfg, ctx, positions, window, theta)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if kind == "moe":
+                moe_p = {"router": lp["router"], "gate": lp["e_gate"],
+                         "up": lp["e_up"], "down": lp["e_down"]}
+                m = moe_block(h, moe_p, k=cfg.experts_per_token,
+                              n_experts=cfg.n_experts,
+                              capacity_factor=cfg.capacity_factor,
+                              mesh=ctx.mesh, data_axes=ctx.dp,
+                              model_axis=ctx.tp, fsdp=bool(ctx.fsdp),
+                              f32_combine=cfg.moe_combine_f32_materialize,
+                              gather_dispatch=cfg.moe_gather_dispatch)
+            else:
+                m = mlp_block(h, lp)
+            x = x + m
+            if collect_cache:
+                cache_ys = kv_cache
+        else:  # ssm / hybrid scanned layers are mamba blocks
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            blk = mam.mamba2_block if cfg.ssm_variant == "mamba2" else mam.mamba1_block
+            y, (hstate, conv_tail) = blk(h, lp, cfg)
+            x = x + y
+            if collect_cache:
+                cache_ys = (hstate, conv_tail)
+        return x, cache_ys
+
+    return body
+
+
+def _window_theta_arrays(cfg: ModelConfig):
+    plan, _ = layer_plan(cfg)
+    win = np.array([e["window"] for e in plan], np.int32)
+    th = np.array([e["theta"] for e in plan], np.float32)
+    return jnp.asarray(win), jnp.asarray(th)
+
+
+def run_stack(x, params, cfg: ModelConfig, ctx: ShardCtx, positions,
+              collect_cache: bool = False):
+    """x: (b, s, d) -> (b, s, d) [, stacked per-layer cache]."""
+    body = _layer_body(cfg, ctx, collect_cache)
+    win, th = _window_theta_arrays(cfg)
+    _, meta = layer_plan(cfg)
+
+    def scan_fn(carry, xs):
+        lp, w, t = xs
+        fn = body
+        if cfg.remat:
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(carry, lp, w, t, positions)
+
+    if cfg.scan_layers and not meta["shared_at"]:
+        x, caches = jax.lax.scan(scan_fn, x, (params["layers"], win, th))
+        return x, caches
+
+    if meta["shared_at"]:
+        # hybrid: segment the scan at shared-attention points so the shared
+        # block runs between scans (keeps scanned body homogeneous).
+        period = cfg.hybrid_attn_period
+        caches, shared_kv = [], []
+        i = 0
+        while i < cfg.n_layers:
+            j = min(i + period, cfg.n_layers)
+            seg = jax.tree.map(lambda a: a[i:j], params["layers"])
+            x, c = jax.lax.scan(scan_fn, x, (seg, win[i:j], th[i:j]))
+            caches.append(c)
+            if (j - 1) in meta["shared_at"]:
+                hq = rms_norm(x, params["shared"]["ln1"], cfg.norm_eps)
+                a, kv = attn_block(hq, params["shared"], cfg, ctx, positions,
+                                   0, cfg.rope_theta)
+                x = x + a
+                hq = rms_norm(x, params["shared"]["ln2"], cfg.norm_eps)
+                x = x + mlp_block(hq, params["shared"])
+                if collect_cache:
+                    shared_kv.append(kv)
+            i = j
+        if collect_cache:
+            cat = lambda *xs: jnp.concatenate(xs, 0)
+            caches = jax.tree.map(cat, *caches) if len(caches) > 1 else caches[0]
+            sk = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *shared_kv) if shared_kv else ()
+            return x, (caches, sk)
+        return x, ()
+
+    # unrolled (small configs / debugging)
+    caches = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        x, c = body(x, lp, win[i], th[i], positions)
+        caches.append(c)
+    if collect_cache and caches and caches[0] != ():
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *caches)
+    return x, caches

@@ -1,0 +1,76 @@
+"""Functional AdamW with optional ZeRO-1-style state sharding.
+
+State (m, v in fp32) inherits the parameters' partition specs, so with FSDP
+sharding rules the optimizer state is already ZeRO-sharded over the data
+axis; update math runs in fp32 and casts back to the param dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def _lr(self, step):
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip > 0:
+            norm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+            scale = jnp.minimum(1.0, self.grad_clip / (norm + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr = self._lr(step)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(p, g, m, v):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, g32, state.m, state.v)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(step, new_m, new_v)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 *
+                      (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

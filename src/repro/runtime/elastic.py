@@ -1,0 +1,47 @@
+"""Elastic scaling: when the healthy device count changes (node failure,
+capacity change), re-run the Pipette search for the new G, rebuild the
+mesh with the new worker dedication, and reshard the checkpoint.
+
+This is the paper's configurator promoted to a *runtime* fault-tolerance
+mechanism: the same Algorithm 1 that picked the initial configuration
+re-plans after topology changes, and the same latency estimator scores
+candidate mappings against the re-profiled bandwidth matrix.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core.cluster import ClusterSpec, profile_bandwidth
+from ..core.memory import MemoryEstimator
+from ..core.search import SearchResult, configure
+from ..core.simulator import Workload
+
+
+@dataclass
+class ElasticPlan:
+    result: SearchResult
+    n_gpus: int
+    bw: np.ndarray
+
+
+def replan(w: Workload, spec: ClusterSpec, healthy_nodes: int, *,
+           estimator: Optional[MemoryEstimator] = None,
+           sa_seconds: float = 0.5, seed: int = 0) -> ElasticPlan:
+    """Re-plan for a degraded/grown cluster of ``healthy_nodes`` nodes.
+
+    Steps: re-profile the (changed) interconnect, re-run Algorithm 1 on
+    the new GPU count, return the plan whose mapping the runtime feeds to
+    ``launch.mesh.mesh_from_mapping`` before restoring the checkpoint with
+    the new partition specs."""
+    new_spec = spec.with_nodes(healthy_nodes)
+    bw, _ = profile_bandwidth(new_spec)
+    res = configure(w, new_spec, bw, estimator=estimator,
+                    sa_seconds=sa_seconds, seed=seed)
+    if res.best is None:
+        raise RuntimeError(
+            f"no feasible configuration for {new_spec.n_gpus} GPUs — "
+            f"memory limit too tight for every (pp, tp, dp, bs_micro)")
+    return ElasticPlan(res, new_spec.n_gpus, bw)

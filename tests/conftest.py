@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# subprocess); make sure nothing leaks XLA_FLAGS into this process.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,83 @@
+"""Integration checks over the shipped dry-run artifacts: the 40-cell x
+2-mesh matrix is complete, terms are sane, and the re-analysis path is
+idempotent (skipped when artifacts are absent, e.g. on a fresh clone)."""
+import json
+from pathlib import Path
+
+import pytest
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not ART.exists() or not list(ART.glob("*.json")),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun --all)")
+
+
+def _baseline_cells():
+    import sys
+    sys.path.insert(0, str(ART.parent.parent))
+    from benchmarks.roofline import load_cells
+    return load_cells(ART)
+
+
+def test_matrix_complete():
+    cells = _baseline_cells()
+    assert len(cells) == 80                     # 10 archs x 4 shapes x 2 meshes
+    skips = [c for c in cells if "skipped" in c]
+    assert len(skips) == 14                     # 7 full-attn archs x 2 meshes
+    for c in skips:
+        assert c["shape"] == "long_500k"
+
+
+def test_terms_sane():
+    cells = [c for c in _baseline_cells() if "skipped" not in c]
+    assert len(cells) == 66
+    for c in cells:
+        assert c["flops_per_dev"] > 0, c["arch"]
+        assert c["hbm_bytes_per_dev"] > 0
+        assert c["t_compute"] >= 0 and c["t_memory"] > 0
+        assert c["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 < c["useful_flops_ratio"] <= 1.5, (c["arch"], c["shape"])
+        if c["shape"] == "train_4k":
+            # training must communicate (grad sync at minimum)
+            assert c["collective_bytes_per_dev"] > 0
+        assert c["n_devices"] == (512 if c["mesh"] == "2x16x16" else 256)
+
+
+def test_multipod_shards_the_pod_axis():
+    """Multi-pod per-device bytes must not exceed single-pod for train
+    cells (DP over the pod axis halves per-device state)."""
+    cells = {(c["arch"], c["shape"], c["mesh"]): c
+             for c in _baseline_cells() if "skipped" not in c}
+    for (arch, shape, mesh), c in cells.items():
+        if shape != "train_4k" or mesh != "16x16":
+            continue
+        multi = cells.get((arch, shape, "2x16x16"))
+        assert multi is not None, arch
+        assert multi["bytes_per_device"] <= c["bytes_per_device"] * 1.05, arch
+
+
+def test_reanalysis_idempotent(tmp_path):
+    import shutil
+    import zstandard  # noqa: F401  (required by reanalyze)
+    from repro.launch.reanalyze import reanalyze
+    src = next(p for p in ART.glob("*.json")
+               if p.with_name(p.stem + ".hlo.zst").exists())
+    shutil.copy(src, tmp_path / src.name)
+    shutil.copy(src.with_name(src.stem + ".hlo.zst"),
+                tmp_path / (src.stem + ".hlo.zst"))
+    before = json.loads((tmp_path / src.name).read_text())
+    assert reanalyze(tmp_path) == 1
+    after = json.loads((tmp_path / src.name).read_text())
+    assert after["flops_per_dev"] == pytest.approx(before["flops_per_dev"])
+    assert after["bottleneck"] == before["bottleneck"]
+
+
+def test_report_renders():
+    from benchmarks.roofline import markdown_table, roofline_rows
+    cells = _baseline_cells()
+    for mesh in ("16x16", "2x16x16"):
+        rows = roofline_rows(cells, mesh)
+        table = markdown_table(rows)
+        assert table.count("\n") >= 40
+        assert "SKIP" in table

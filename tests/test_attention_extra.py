@@ -1,0 +1,111 @@
+"""Extra attention/RoPE/decode invariants (hypothesis + targeted cases)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    reference_attention)
+from repro.models.layers import apply_rope
+
+KEY = jax.random.PRNGKey(3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([32, 48, 64]), kv=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2]), cq=st.sampled_from([8, 16, 32]))
+def test_chunked_attention_matches_reference(sq, kv, g, cq):
+    h, hd, b = kv * g, 16, 2
+    ks = jax.random.split(jax.random.PRNGKey(sq * 100 + kv * 10 + g), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd))
+    k = jax.random.normal(ks[1], (b, sq, kv, hd))
+    v = jax.random.normal(ks[2], (b, sq, kv, hd))
+    out = chunked_attention(q, k, v, chunk_q=cq, chunk_k=cq)
+    ref = reference_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_q_offset_matches_suffix_of_full():
+    """Attention of a query suffix with q_offset equals the suffix of the
+    full computation (continuation semantics)."""
+    b, s, h, kv, hd = 1, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    full = chunked_attention(q, k, v, chunk_q=16, chunk_k=16)
+    tail = chunked_attention(q[:, 48:], k, v, q_offset=48, chunk_q=16,
+                             chunk_k=16)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 48:]),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_matches_full_row():
+    b, s, h, kv, hd = 2, 32, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q_all = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    full = reference_attention(q_all, k, v)
+    for pos in (0, 7, 31):
+        out = decode_attention(q_all[:, pos:pos + 1], k, v, jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, pos]), rtol=3e-5,
+                                   atol=3e-5)
+
+
+def test_decode_attention_sliding_window():
+    b, s, h, kv, hd = 1, 32, 2, 2, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    pos, win = 20, 8
+    out = decode_attention(q, k, v, jnp.int32(pos), window=win)
+    # reference: zero out everything outside [pos-win+1, pos]
+    mask = np.zeros(s, bool)
+    mask[pos - win + 1:pos + 1] = True
+    kf = np.asarray(k)
+    vf = np.asarray(v)
+    qf = np.asarray(q)[:, 0].reshape(b, kv, 1, hd)
+    sc = np.einsum("bkgd,bskd->bkgs", qf / np.sqrt(hd), kf)
+    sc[..., ~mask] = -1e30
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("bkgs,bskd->bkgd", p, vf).reshape(b, 1, h, hd)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=3e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    b, s, h, hd = 1, 16, 2, 32
+    x = jax.random.normal(KEY, (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd))
+    def dot_at(p, d):
+        rq = apply_rope(q, jnp.full((1, 1), p), 1e4)
+        rk = apply_rope(k, jnp.full((1, 1), p + d), 1e4)
+        return float(jnp.sum(rq * rk))
+    assert dot_at(3, 5) == pytest.approx(dot_at(11, 5), rel=1e-4)
+    assert dot_at(0, 2) == pytest.approx(dot_at(9, 2), rel=1e-4)
+
+
+def test_empty_window_rows_are_zero():
+    """Rows whose window excludes every key (can happen with ring padding)
+    must come out exactly zero, not NaN."""
+    b, s, h, kv, hd = 1, 16, 2, 2, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    out = chunked_attention(q, k, v, causal=True, q_offset=-4,
+                            chunk_q=8, chunk_k=8)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out[:, :4]), 0.0, atol=1e-6)

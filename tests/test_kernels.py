@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (requirement c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.selective_scan import selective_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+FA_CASES = [
+    # (b, h, kv, sq, sk, d, causal, window, dtype)
+    (2, 4, 2, 128, 128, 32, True, 0, jnp.float32),
+    (1, 4, 4, 256, 256, 64, True, 0, jnp.float32),
+    (2, 2, 1, 128, 256, 32, False, 0, jnp.float32),
+    (1, 4, 2, 256, 256, 32, True, 64, jnp.float32),
+    (1, 8, 2, 128, 128, 128, True, 0, jnp.bfloat16),
+    (1, 2, 2, 64, 192, 16, True, 48, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES, ids=[str(c[:8]) for c in FA_CASES])
+def test_flash_attention_sweep(case):
+    b, h, kv, sq, sk, d, causal, window, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    oracle = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                          interpret=True)
+    oracle = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(rows=st.integers(1, 70), d=st.sampled_from([32, 128, 384]),
+       bf16=st.booleans())
+def test_rmsnorm_sweep(rows, d, bf16):
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    ks = jax.random.split(jax.random.PRNGKey(rows * 1000 + d), 2)
+    x = (jax.random.normal(ks[0], (rows, d), jnp.float32) * 3).astype(dtype)
+    w = jax.random.normal(ks[1], (d,), jnp.float32).astype(dtype)
+    out = rmsnorm(x, w, interpret=True, block_rows=16)
+    oracle = ref.rmsnorm_ref(x, w)
+    tol = 1e-5 if not bf16 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32),
+                               rtol=tol, atol=tol)
+
+
+SCAN_CASES = [
+    # (b, s, d, n, chunk, block_d)
+    (2, 64, 32, 8, 16, 16),
+    (1, 96, 16, 4, 32, 16),
+    (2, 128, 64, 16, 64, 32),
+    (1, 50, 24, 8, 25, 24),
+]
+
+
+@pytest.mark.parametrize("case", SCAN_CASES, ids=[str(c) for c in SCAN_CASES])
+def test_selective_scan_sweep(case):
+    b, s, d, n, chunk, block_d = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(case)), 5)
+    x = jax.random.normal(ks[0], (b, s, d)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d))) * 0.1
+    bb = jax.random.normal(ks[2], (b, s, n))
+    cc = jax.random.normal(ks[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.3)
+    y, h = selective_scan(x, dt, bb, cc, a, chunk=chunk, block_d=block_d,
+                          interpret=True)
+    yr, hr = ref.selective_scan_ref(x, dt, bb, cc, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_models_chunked_scan_matches_kernel_oracle():
+    """models/mamba.selective_scan (associative-scan form) agrees with the
+    kernel's sequential oracle — two independent derivations."""
+    from repro.models.mamba import selective_scan as assoc_scan
+    ks = jax.random.split(KEY, 5)
+    b, s, d, n = 2, 64, 16, 8
+    x = jax.random.normal(ks[0], (b, s, d)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d))) * 0.1
+    bb = jax.random.normal(ks[2], (b, s, n))
+    cc = jax.random.normal(ks[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.3)
+    y1, h1 = assoc_scan(x, dt, bb, cc, a, chunk=16)
+    y2, h2 = ref.selective_scan_ref(x, dt, bb, cc, a)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Mamba2 SSD chunked dual form vs direct per-step recurrence."""
+    from repro.models.mamba import ssd_scan, ssd_step
+    ks = jax.random.split(KEY, 5)
+    b, s, h, p, n = 1, 32, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.2
+    bb = jax.random.normal(ks[2], (b, s, n))
+    cc = jax.random.normal(ks[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(ks[4], (h,)) * 0.3)
+    y, hf = ssd_scan(x, dt, bb, cc, a, chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, state = ssd_step(x[:, t], dt[:, t], bb[:, t], cc[:, t], a, state)
+        ys.append(yt)
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(state), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,114 @@
+"""Unit checks of the paper's equations (1), (3)-(6) against hand
+calculations, and of the simulator's agreement with the model."""
+import numpy as np
+import pytest
+
+from repro.core import (MID_RANGE, Conf, Workload, build_profile,
+                        default_mapping, true_bandwidth_matrix)
+from repro.core.cluster import ring_allreduce_time, min_group_bw
+from repro.core.latency import amp_latency, pipette_latency, _t_pp_chain
+from repro.core.simulator import Profile, simulate_iteration, dp_allreduce_times
+from repro.models.config import ModelConfig
+
+GPT = ModelConfig(name="g", family="dense", n_layers=24, d_model=1920,
+                  n_heads=20, n_kv_heads=20, d_ff=7680, vocab_size=51200)
+SPEC = MID_RANGE.with_nodes(8)
+W = Workload(GPT, 2048, 256)
+
+
+def uniform_bw(spec, value=10e9):
+    g = spec.n_gpus
+    bw = np.full((g, g), value)
+    node = np.arange(g) // spec.gpus_per_node
+    same = node[:, None] == node[None, :]
+    bw[same] = spec.intra_bw
+    np.fill_diagonal(bw, spec.intra_bw * 4)
+    return bw
+
+
+def test_pipette_latency_hand_computed():
+    """T = T_bubble * n_mb/pp + T_straggler + T_dp with uniform links."""
+    conf = Conf(4, 8, 2, 2, 256)
+    prof = Profile(c_fwd=0.010, c_bwd=0.020, t_tp_fwd=0.001, t_tp_bwd=0.002,
+                   msg_pp=8e6, msg_dp=1e8, stage_params=1e8)
+    bw = uniform_bw(SPEC)
+    m = default_mapping(conf)
+    c, t_tp = 0.030, 0.003
+    # Eq. 5: chain of pp-1 hops, 2*msg per hop; every hop is inter-node
+    t_pp = (conf.pp - 1) * 2 * 8e6 / 10e9
+    t_bubble = conf.pp * (c + t_tp) + t_pp
+    t_straggler = (conf.pp - 1) * (c + t_tp)
+    # Eq. 6: dp group of 2 spans nodes -> single inter-node ring of 2
+    t_dp = dp_allreduce_times(conf, m, bw, prof, SPEC)[0]
+    expected = t_bubble * conf.n_mb / conf.pp + t_straggler + t_dp
+    got = pipette_latency(conf, m, bw, prof, SPEC)
+    assert got == pytest.approx(expected, rel=1e-9)
+
+
+def test_amp_latency_hand_computed():
+    conf = Conf(4, 8, 2, 2, 256)
+    prof = Profile(0.010, 0.020, 0.001, 0.002, 8e6, 1e8, 1e8)
+    c, t_tp = 0.030, 0.003
+    expected = (conf.n_mb - 1) * (c + t_tp) + conf.pp * (c + t_tp) \
+        + (conf.pp - 1) * 2 * 8e6 / SPEC.inter_bw \
+        + ring_allreduce_time(1e8, SPEC.inter_bw, conf.dp)
+    got = amp_latency(conf, default_mapping(conf), SPEC, prof)
+    assert got == pytest.approx(expected, rel=1e-9)
+
+
+def test_hidden_critical_path_scales_with_n_mb():
+    """Pipette's model charges the P2P chain n_mb/pp times; AMP once.
+    The gap grows linearly with n_mb — the §V hidden critical path."""
+    prof = Profile(0.010, 0.020, 0.001, 0.002, 16e6, 1e8, 1e8)
+    bw = uniform_bw(SPEC)
+    gaps = []
+    for mb_count in (16, 32, 64):
+        conf = Conf(8, 4, 2, 128 // mb_count, 256)
+        m = default_mapping(conf)
+        gaps.append(pipette_latency(conf, m, bw, prof, SPEC) -
+                    amp_latency(conf, m, SPEC, prof))
+    # strictly increasing communication term (compute terms nearly cancel)
+    assert gaps[0] < gaps[1] < gaps[2]
+
+
+def test_simulator_close_to_model_on_uniform_cluster():
+    """With jitter/contention off and uniform links the event-driven sim
+    should be within a few % of the closed-form model."""
+    bw = uniform_bw(SPEC)
+    for conf in [Conf(8, 2, 4, 1, 256), Conf(4, 8, 2, 2, 256),
+                 Conf(2, 8, 4, 4, 256)]:
+        prof = build_profile(W, SPEC, conf)
+        m = default_mapping(conf)
+        sim = simulate_iteration(conf, m, bw, prof, SPEC, jitter=0,
+                                 contention=0)["total"]
+        est = pipette_latency(conf, m, bw, prof, SPEC)
+        assert sim == pytest.approx(est, rel=0.08), conf
+
+
+def test_eq5_takes_slowest_chain():
+    conf = Conf(2, 1, 1, 1, 1)
+    prof = Profile(0.01, 0.02, 0, 0, msg_pp=10e6, msg_dp=1, stage_params=1)
+    g = SPEC.n_gpus
+    bw = uniform_bw(SPEC, 10e9)
+    m = np.array([[[0]], [[8]]])       # stage0 gpu0 -> stage1 gpu8
+    bw[0, 8] = 2e9                     # slow that specific link
+    assert _t_pp_chain(conf, m, bw, prof) == pytest.approx(2 * 10e6 / 2e9)
+
+
+def test_dp_allreduce_hierarchical_structure():
+    """Eq. 6: intra-node phase uses 4(n-1)/n, inter-node 2(n-1)/n with the
+    slowest participating link."""
+    conf = Conf(1, 1, 16, 1, 16)
+    prof = Profile(0, 0, 0, 0, 0, msg_dp=8e7, stage_params=1)
+    bw = uniform_bw(SPEC, 10e9)
+    m = np.arange(16).reshape(1, 1, 16)     # two nodes of 8
+    t = dp_allreduce_times(conf, m, bw, prof, SPEC)[0]
+    intra = 4 * (8 - 1) / 8 * 8e7 / SPEC.intra_bw
+    inter = 2 * (2 - 1) / 2 * 8e7 / 10e9
+    assert t == pytest.approx(intra + inter, rel=1e-9)
+
+
+def test_heterogeneity_visible_in_matrix():
+    bw = true_bandwidth_matrix(SPEC)
+    inter = bw[bw < SPEC.intra_bw * 0.5]
+    assert inter.max() / inter.min() > 1.8   # Fig. 3-scale spread

@@ -1,0 +1,95 @@
+"""Memory estimator (§VI): ground-truth structure, the analytical
+baseline's systematic underestimation, MLP fit quality, and config
+enumeration properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MID_RANGE, Conf, Workload, analytical_estimate,
+                        enumerate_confs, fit_memory_estimator,
+                        ground_truth_memory, mape)
+from repro.models.config import ModelConfig
+
+
+def gpt(l, d, h, name="m"):
+    return ModelConfig(name=f"{name}-{l}-{d}", family="dense", n_layers=l,
+                       d_model=d, n_heads=h, n_kv_heads=h, d_ff=4 * d,
+                       vocab_size=51200)
+
+
+SPEC = MID_RANGE
+
+
+@settings(max_examples=40, deadline=None)
+@given(g_exp=st.integers(3, 7), bs_exp=st.integers(6, 9))
+def test_enumerate_confs_products(g_exp, bs_exp):
+    g, bs = 2 ** g_exp, 2 ** bs_exp
+    confs = enumerate_confs(g, bs, n_layers=32)
+    assert confs, "search space must be non-empty"
+    for c in confs:
+        assert c.pp * c.tp * c.dp == g
+        assert bs % c.dp == 0
+        assert c.bs_mini % c.bs_micro == 0
+        assert c.valid()
+    assert len({(c.pp, c.tp, c.dp, c.bs_micro) for c in confs}) == len(confs)
+
+
+def test_analytical_systematically_underestimates():
+    """The [20]-style baseline misses framework overheads + 1F1B inflight
+    activations: it must underestimate ground truth (Fig. 7 behaviour)."""
+    w = Workload(gpt(24, 1920, 20), 2048, 256)
+    under = total = 0
+    for conf in enumerate_confs(64, 256, n_layers=24)[:160]:
+        if conf.bs_micro > 8:
+            continue
+        total += 1
+        if analytical_estimate(w, conf) < ground_truth_memory(w, conf, SPEC):
+            under += 1
+    assert under / total > 0.95
+
+
+def test_memory_ground_truth_monotonicity():
+    w = Workload(gpt(24, 1920, 20), 2048, 256)
+    base = Conf(4, 4, 4, 2, 256)
+    more_micro = Conf(4, 4, 4, 4, 256)
+    more_tp = Conf(4, 8, 2, 2, 256)
+    assert ground_truth_memory(w, more_micro, SPEC) > \
+        ground_truth_memory(w, base, SPEC)
+    assert ground_truth_memory(w, more_tp, SPEC) < \
+        ground_truth_memory(w, base, SPEC)
+
+
+def test_mlp_estimator_beats_analytical():
+    """Train on <=2 nodes, validate on 8-node configs (extrapolation).
+    At this toy scale the reproducible 'library variance' noise floor
+    dominates absolute MAPE; the robust claim (paper Fig. 7 direction) is
+    MLP << analytical."""
+    models = [gpt(12, 768, 12, "a"), gpt(16, 1024, 16, "b"),
+              gpt(20, 1280, 20, "c")]
+    ws = [Workload(m, 1024, bsg) for m in models
+          for bsg in (16, 32, 64, 128)]
+    est = fit_memory_estimator(ws, SPEC, fit_nodes=2, steps=6000,
+                               residual=True)
+    w = Workload(models[0], 1024, 64)
+    preds, anas, trues = [], [], []
+    for conf in enumerate_confs(64, w.bs_global, n_layers=w.cfg.n_layers):
+        if conf.bs_micro > 8:
+            continue
+        trues.append(ground_truth_memory(w, conf, SPEC))
+        preds.append(est.predict(w.cfg, conf))
+        anas.append(analytical_estimate(w, conf))
+    m_mlp, m_ana = mape(preds, trues), mape(anas, trues)
+    assert m_mlp < 0.6 * m_ana, (m_mlp, m_ana)
+    assert m_mlp < 50.0, m_mlp
+
+
+def test_estimator_soft_margin_blocks_oom():
+    models = [gpt(12, 768, 12)]
+    ws = [Workload(models[0], 1024, 64)]
+    est = fit_memory_estimator(ws, SPEC, fit_nodes=1, steps=2000,
+                               residual=True)
+    w = ws[0]
+    conf = enumerate_confs(8, 64, n_layers=12)[0]
+    limit = est.predict(w.cfg, conf)
+    assert not est.fits(w.cfg, conf, limit * 0.5)
+    assert est.fits(w.cfg, conf, limit * 2.0)

@@ -1,0 +1,67 @@
+"""Sharding-policy invariants: every parameter spec the policy emits must
+divide the tensor on both production meshes, for every assigned arch —
+this is the property the 80-cell dry-run depends on."""
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.models.sharding import ShardCtx, tree_pspecs
+
+MESHES = {
+    "16x16": {"data": 16, "model": 16},
+    "2x16x16": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _fake_ctx(mesh_name):
+    shape = MESHES[mesh_name]
+    mesh = SimpleNamespace(shape=shape)
+    dp = ("pod", "data") if "pod" in shape else ("data",)
+    return ShardCtx(mesh=mesh, dp=dp, tp="model", fsdp=("data",))
+
+
+@pytest.mark.parametrize("arch", sorted(configs.ARCHS))
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+def test_param_specs_divide(arch, mesh_name):
+    cfg = configs.get(arch)
+    ctx = _fake_ctx(mesh_name)
+    sds = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = tree_pspecs(sds, cfg, ctx)
+
+    def check(path, leaf_sds, spec):
+        assert len(spec) <= len(leaf_sds.shape), (path, spec)
+        for dim, ax in zip(leaf_sds.shape, tuple(spec) + (None,) * 9):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            n = 1
+            for a in axes:
+                n *= MESHES[mesh_name][a]
+            assert dim % n == 0, (arch, mesh_name, path, dim, ax)
+
+    flat_s, _ = jax.tree.flatten_with_path(sds)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        check(jax.tree_util.keystr(path), leaf, spec)
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "command-r-plus-104b",
+                                  "qwen2-7b"])
+def test_tp_actually_shards_big_weights(arch):
+    """The model axis must land on at least the FFN/expert weights —
+    otherwise TP is a no-op and the dry-run memory numbers lie."""
+    cfg = configs.get(arch)
+    ctx = _fake_ctx("16x16")
+    sds = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = tree_pspecs(sds, cfg, ctx)
+    layer_specs = specs["layers"]
+    key = "e_gate" if cfg.family == "moe" else "gate"
+    spec = layer_specs[key]
+    axes = {a for ax in spec if ax is not None
+            for a in ((ax,) if isinstance(ax, str) else ax)}
+    assert "model" in axes, (arch, spec)
