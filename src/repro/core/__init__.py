@@ -5,11 +5,16 @@ simulator used as the real-cluster stand-in, and the AMP/Varuna/Megatron
 baselines."""
 
 from .cluster import (ClusterSpec, HIGH_END, MID_RANGE, TPU_POD,
-                      profile_bandwidth, true_bandwidth_matrix)
-from .simulator import Conf, Profile, Workload, build_profile, default_mapping, measure
-from .latency import amp_latency, pipette_latency, varuna_latency
+                      min_group_bw, min_group_bw_batch, profile_bandwidth,
+                      true_bandwidth_matrix)
+from .simulator import (Conf, Profile, Workload, build_profile,
+                        default_mapping, dp_allreduce_times,
+                        dp_allreduce_times_ref, measure)
+from .latency import (amp_latency, pipette_latency, pipette_latency_ref,
+                      varuna_latency)
 from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
                      fit_memory_estimator, ground_truth_memory, mape)
-from .dedication import anneal, perm_to_mapping
+from .dedication import (DedicationEngine, GroupIndex, SAResult, anneal,
+                         anneal_multistart, perm_to_mapping)
 from .search import Candidate, SearchResult, configure
 from .baselines import amp_configure, mlm_configure, varuna_configure

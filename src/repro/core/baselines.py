@@ -16,7 +16,17 @@ from .simulator import Conf, Workload, build_profile, default_mapping, measure
 
 def amp_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> SearchResult:
     """AMP: Eq. 1 latency model, nominal bandwidths, memory-unaware,
-    identity GPU assignment."""
+    identity GPU assignment.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description (nominal bandwidths only are used).
+        max_micro: skip configurations with ``bs_micro`` above this.
+
+    Returns:
+        :class:`~repro.core.search.SearchResult` ranked by Eq. 1 latency
+        (``mem_pred`` is ``nan`` — AMP does not model memory).
+    """
     cands = []
     for conf in enumerate_confs(spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers):
         if conf.bs_micro > max_micro:
@@ -29,7 +39,17 @@ def amp_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> Sea
 
 
 def varuna_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> SearchResult:
-    """Varuna: pipeline+data parallelism only (tp = 1), memory-unaware."""
+    """Varuna: pipeline+data parallelism only (tp = 1), memory-unaware.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description (nominal bandwidths only are used).
+        max_micro: skip configurations with ``bs_micro`` above this.
+
+    Returns:
+        :class:`~repro.core.search.SearchResult` ranked by the Varuna-style
+        estimate (``mem_pred`` is ``nan``).
+    """
     cands = []
     for conf in enumerate_confs(spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers):
         if conf.tp != 1 or conf.bs_micro > max_micro:
@@ -47,7 +67,20 @@ def mlm_configure(w: Workload, spec: ClusterSpec, bw_true: np.ndarray, *,
     """Megatron-LM manual tuning: tp = gpus-per-node, then try promising
     (pp, mb) combinations one by one on the cluster (here: the simulator)
     until the fastest runnable one is found — i.e. actual manual labour,
-    memory-checked by construction."""
+    memory-checked by construction.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description.
+        bw_true: ground-truth bandwidth matrix the trial runs execute on.
+        max_micro: skip configurations with ``bs_micro`` above this.
+        trials: how many promising configs the "expert" actually runs.
+        seed: simulator seed for the trial runs.
+
+    Returns:
+        :class:`~repro.core.search.SearchResult` over the tried configs,
+        ranked by *measured* (simulated) iteration time.
+    """
     tp = spec.gpus_per_node
     cands: List[Candidate] = []
     for conf in enumerate_confs(spec.n_gpus, w.bs_global, max_tp=tp,

@@ -63,6 +63,14 @@ def true_bandwidth_matrix(spec: ClusterSpec, day: int = 0) -> np.ndarray:
     Inter-node factors are near-symmetric lognormals with a straggler tail;
     intra-node links jitter mildly.  ``day`` shifts the realisation to model
     the temporal drift of Fig. 3.
+
+    Args:
+        spec: cluster description (sizes, nominal bandwidths, heterogeneity).
+        day: realisation index modelling day-to-day drift.
+
+    Returns:
+        ``(n_gpus, n_gpus)`` bytes/s matrix; the diagonal (self-transfer) is
+        effectively free.
     """
     rng = np.random.default_rng(spec.seed * 1000003 + day)
     g = spec.n_gpus
@@ -89,9 +97,15 @@ def profile_bandwidth(spec: ClusterSpec, day: int = 0,
                       noise: float = 0.01) -> tuple[np.ndarray, float]:
     """'network_profile()' of Algorithm 1 line 1.
 
-    Returns (measured matrix, profiling wall-seconds).  Measurement noise is
-    ~1%; the cost model is calibrated to the paper's Table II (58 s @ 8
-    nodes, 239 s @ 16 nodes — all-pairs mpiGraph grows with n_nodes^2).
+    Args:
+        spec: cluster description.
+        day: realisation index (see :func:`true_bandwidth_matrix`).
+        noise: relative measurement noise (~1% default).
+
+    Returns:
+        ``(measured_matrix, profiling_wall_seconds)``.  The cost model is
+        calibrated to the paper's Table II (58 s @ 8 nodes, 239 s @ 16
+        nodes — all-pairs mpiGraph grows with n_nodes^2).
     """
     rng = np.random.default_rng(spec.seed * 7919 + day + 1)
     truth = true_bandwidth_matrix(spec, day)
@@ -130,17 +144,58 @@ def profile_bandwidth_live(devices=None, msg_bytes: int = 1 << 20) -> np.ndarray
 
 def ring_allreduce_time(msg_bytes: float, group_bw: float, n: int,
                         phases: int = 2) -> float:
-    """Thakur et al. ring all-reduce: phases * (n-1)/n * msg / bw."""
+    """Thakur et al. ring all-reduce: phases * (n-1)/n * msg / bw.
+
+    Args:
+        msg_bytes: bytes contributed by each rank.
+        group_bw: bottleneck link bandwidth of the ring, bytes/s.
+        n: ring size (0 seconds when ``n <= 1``).
+        phases: 2 for reduce-scatter + all-gather over one message pass,
+            4 for the hierarchical intra-node stage.
+
+    Returns:
+        Seconds for the collective.
+    """
     if n <= 1:
         return 0.0
     return phases * (n - 1) / n * msg_bytes / group_bw
 
 
 def min_group_bw(bw: np.ndarray, gpus) -> float:
-    """Slowest pairwise link inside a communicator group (Eq. 6 denominator)."""
+    """Slowest pairwise link inside a communicator group (Eq. 6 denominator).
+
+    Args:
+        bw: ``(G, G)`` bandwidth matrix in bytes/s.
+        gpus: iterable of GPU indices forming the group.
+
+    Returns:
+        Minimum off-diagonal entry of the group's bandwidth submatrix
+        (both directions considered); ``inf`` for groups of size <= 1.
+    """
     gpus = list(gpus)
     if len(gpus) <= 1:
         return float("inf")
     sub = bw[np.ix_(gpus, gpus)].copy()
     np.fill_diagonal(sub, np.inf)
     return float(sub.min())
+
+
+def min_group_bw_batch(bw: np.ndarray, groups: np.ndarray) -> np.ndarray:
+    """Batched :func:`min_group_bw`: slowest intra-group link per group.
+
+    Args:
+        bw: ``(G, G)`` bandwidth matrix in bytes/s.
+        groups: ``(n_groups, m)`` integer array of GPU ids, one group per row.
+
+    Returns:
+        ``(n_groups,)`` array of the minimum off-diagonal submatrix entry per
+        group (``inf`` when ``m <= 1``).  Bit-identical to calling
+        :func:`min_group_bw` row by row.
+    """
+    ids = np.asarray(groups, dtype=np.intp)
+    n_groups, m = ids.shape
+    if m <= 1:
+        return np.full(n_groups, np.inf)
+    sub = bw[ids[:, :, None], ids[:, None, :]]
+    eye = np.eye(m, dtype=bool)
+    return np.where(eye[None, :, :], np.inf, sub).min(axis=(1, 2))

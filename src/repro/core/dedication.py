@@ -6,12 +6,21 @@ position), *swap* (exchange two elements) and *reverse* (reverse a
 substring — exploits the near-symmetric bidirectional bandwidths).
 Temperature decay alpha = 0.999; the budget is wall-clock seconds with an
 iteration cap so tests stay fast.
+
+The hot loop is driven by :class:`DedicationEngine`, an incremental
+vectorized scorer: the three SA moves touch a known set of permutation
+positions, and only the TP groups / pipeline chains / first-stage DP groups
+containing those positions are re-gathered and re-reduced — everything else
+comes from per-group caches.  Scores are bit-identical to the full
+:func:`repro.core.latency.pipette_latency` (and its pure-Python reference).
+:func:`anneal_multistart` adds best-of-``n_chains`` restarts on top.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,64 +33,404 @@ def perm_to_mapping(perm: np.ndarray, conf: Conf) -> np.ndarray:
     """Flat permutation -> (pp, tp, dp) worker mapping.
 
     Flattening keeps tp fastest so contiguous GPUs (same node) serve one
-    tensor-parallel group in the identity permutation."""
+    tensor-parallel group in the identity permutation.
+
+    Args:
+        perm: ``(n_gpus,)`` permutation of GPU ids; position ``p`` holds the
+            GPU serving logical worker ``(x, y, z)`` with
+            ``p = x*dp*tp + z*tp + y``.
+        conf: parallelism configuration.
+
+    Returns:
+        ``(pp, tp, dp)`` integer mapping array.
+    """
     return perm.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
 
 
 @dataclass
 class SAResult:
+    """Outcome of one (or a multi-start batch of) annealing run(s).
+
+    Attributes:
+        mapping: best ``(pp, tp, dp)`` worker -> GPU dedication found.
+        perm: the flat permutation behind ``mapping``.
+        latency: estimated seconds/iteration of ``mapping``.
+        iters: total SA iterations executed (summed over chains).
+        seconds: total wall-clock seconds spent annealing.
+        trace: ``[(iter, best_so_far), ...]`` of the winning chain.
+        chain_latencies: per-chain best latencies (multi-start only).
+
+    Example:
+        >>> res = anneal(conf, bw, prof, spec, time_limit_s=0.5, seed=0)
+        >>> res.latency <= pipette_latency(conf, default_mapping(conf),
+        ...                                bw, prof, spec)
+        True
+        >>> res.mapping.shape == (conf.pp, conf.tp, conf.dp)
+        True
+    """
     mapping: np.ndarray
     perm: np.ndarray
     latency: float
     iters: int
     seconds: float
     trace: list
+    chain_latencies: Optional[List[float]] = None
+
+
+# ---------------------------------------------------------------------------
+# moves
+# ---------------------------------------------------------------------------
+
+def _move_span(perm: np.ndarray,
+               rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+    """One SA move plus the positions it touched.
+
+    Returns:
+        ``(new_perm, touched)`` where ``touched`` is the array of permutation
+        positions whose GPU changed (a superset is allowed; migration and
+        reverse report the contiguous affected span, swap exactly two).
+    """
+    n = len(perm)
+    p = perm.copy()
+    kind, i, j = (int(v) for v in rng.integers((3, n, n - 1)))
+    if j >= i:
+        j += 1
+    if i > j:
+        i, j = j, i
+    if kind == 0:          # migration: remove at i, reinsert at j % (n-1)
+        jj = j % (n - 1)
+        el = p[i]
+        if jj >= i:
+            p[i:jj] = p[i + 1:jj + 1].copy()
+            p[jj] = el
+            touched = np.arange(i, jj + 1)
+        else:
+            p[jj + 1:i + 1] = p[jj:i].copy()
+            p[jj] = el
+            touched = np.arange(jj, i + 1)
+    elif kind == 1:        # swap
+        p[i], p[j] = p[j], p[i]
+        touched = np.array((i, j))
+    else:                  # reverse
+        p[i:j + 1] = p[i:j + 1][::-1]
+        touched = np.arange(i, j + 1)
+    return p, touched
 
 
 def _move(perm: np.ndarray, rng: np.random.Generator) -> np.ndarray:
-    n = len(perm)
-    p = perm.copy()
-    kind = rng.integers(0, 3)
-    i, j = sorted(rng.choice(n, 2, replace=False))
-    if kind == 0:          # migration
-        el = p[i]
-        p = np.delete(p, i)
-        p = np.insert(p, j % (n - 1), el)
-    elif kind == 1:        # swap
-        p[i], p[j] = p[j], p[i]
-    else:                  # reverse
-        p[i:j + 1] = p[i:j + 1][::-1]
-    return p
+    """One SA move (migration / swap / reverse); returns the new permutation."""
+    return _move_span(perm, rng)[0]
 
+
+# ---------------------------------------------------------------------------
+# incremental vectorized scoring engine
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GroupIndex:
+    """Precomputed permutation-position tensors for a (pp, tp, dp) shape.
+
+    Positions follow the :func:`perm_to_mapping` layout
+    ``p = x*dp*tp + z*tp + y``; the tensors depend only on the shape, never
+    on the permutation or bandwidth, so :func:`repro.core.search.configure`
+    shares one instance across every microbatch variant of a parallelism
+    shape.
+
+    Attributes:
+        pos_tp: ``(pp*dp, tp)`` positions of each tensor-parallel group.
+        pos_pp_src / pos_pp_dst: ``(pp-1, tp*dp)`` positions of the sender /
+            receiver of every inter-stage hop, one column per chain.
+        pos_dp0: ``(tp, dp)`` positions of the stage-0 data-parallel groups
+            (the only DP groups on the Eq. 6 critical path).
+    """
+    pp: int
+    tp: int
+    dp: int
+    pos_tp: np.ndarray
+    pos_pp_src: np.ndarray
+    pos_pp_dst: np.ndarray
+    pos_dp0: np.ndarray
+
+    @staticmethod
+    def build(conf: Conf) -> "GroupIndex":
+        """Construct the index tensors for ``conf``'s (pp, tp, dp) shape."""
+        pp, tp, dp = conf.pp, conf.tp, conf.dp
+        base = (np.arange(pp)[:, None] * dp + np.arange(dp)[None, :]) * tp
+        pos_tp = base.reshape(-1, 1) + np.arange(tp)[None, :]
+        chains = np.arange(tp * dp)
+        stages = np.arange(max(pp - 1, 1))[:, None] * (dp * tp)
+        pos_pp_src = stages + chains[None, :]
+        pos_pp_dst = pos_pp_src + dp * tp
+        pos_dp0 = np.arange(dp)[None, :] * tp + np.arange(tp)[:, None]
+        return GroupIndex(pp, tp, dp, pos_tp, pos_pp_src, pos_pp_dst, pos_dp0)
+
+
+class DedicationEngine:
+    """Vectorized pipette-latency scorer with incremental move re-scoring.
+
+    ``score()`` evaluates a permutation from scratch and fills per-group
+    caches (TP-group slowdowns, pipeline-chain times, stage-0 DP all-reduce
+    times).  ``propose()`` re-gathers only the groups containing positions a
+    move touched and combines them with the cached remainder; ``commit()``
+    promotes a proposal to the new committed state.  All values are
+    bit-identical to :func:`repro.core.latency.pipette_latency` on the
+    corresponding mapping.
+
+    Example:
+        >>> eng = DedicationEngine(conf, bw, prof, spec)
+        >>> cur = eng.score(np.arange(conf.n_gpus))
+        >>> cand, touched = _move_span(np.arange(conf.n_gpus), rng)
+        >>> val, pending = eng.propose(cand, touched)
+        >>> eng.commit(pending)          # accept the move
+    """
+
+    def __init__(self, conf: Conf, bw: np.ndarray, prof: Profile,
+                 spec: ClusterSpec, index: Optional[GroupIndex] = None):
+        if index is not None and (index.pp, index.tp, index.dp) != \
+                (conf.pp, conf.tp, conf.dp):
+            raise ValueError("GroupIndex shape mismatch")
+        self.conf = conf
+        self.bw = np.asarray(bw, dtype=float)
+        self.prof = prof
+        self.spec = spec
+        self.idx = index if index is not None else GroupIndex.build(conf)
+        # Move-loop constants, built once instead of per proposal.  All are
+        # properties of GPU *pairs*, so group gathers pull them directly:
+        #   _bw_noself  — bw with the self-link set to inf (min_group_bw mask)
+        #   _bw_intra   — bw restricted to distinct same-node pairs, else inf
+        #   _hop_cost   — 2 * msg_pp / bw, the per-hop pipeline term
+        #   _intra/_inter_coef — ring coefficients phases*(n-1)/n*msg by
+        #     integer group size, computed with the reference op order
+        g = self.bw.shape[0]
+        eye_g = np.eye(g, dtype=bool)
+        node = np.arange(g) // spec.gpus_per_node
+        same = node[:, None] == node[None, :]
+        self._bw_noself = np.where(eye_g, np.inf, self.bw)
+        bw_intra = np.where(same & ~eye_g, self.bw, np.inf)
+        # min over a node-cluster's ordered pairs == min over unordered pairs
+        # of min(bw[i,j], bw[j,i]); symmetrising once halves the reductions
+        self._sym_intra = np.minimum(bw_intra, bw_intra.T)
+        if conf.pp > 1:
+            with np.errstate(divide="ignore"):
+                self._hop_cost = 2.0 * prof.msg_pp / self.bw
+        self._jlt_dp = (np.arange(conf.dp)[None, :] <
+                        np.arange(conf.dp)[:, None])
+        self._intra_coef = np.array(
+            [4 * (c - 1) / c * prof.msg_dp if c else 0.0
+             for c in range(conf.dp + 1)])
+        self._inter_coef = np.array(
+            [2 * (c - 1) / c * prof.msg_dp if c else 0.0
+             for c in range(conf.dp + 1)])
+        self._tp_vals: Optional[np.ndarray] = None
+        self._chain_vals: Optional[np.ndarray] = None
+        self._dp0_vals: Optional[np.ndarray] = None
+
+    # -- per-group recomputation (vectorized gathers over a group subset) --
+
+    def _tp_scales(self, perm: np.ndarray, gsel) -> np.ndarray:
+        ids = perm[self.idx.pos_tp[gsel]]
+        gbw = self._bw_noself[ids[:, :, None], ids[:, None, :]].min(axis=(1, 2))
+        # same degenerate-link guard as latency._tp_scale (scale 1.0 when a
+        # group's min link is 0 or non-finite, e.g. user-supplied matrices)
+        ok = np.isfinite(gbw) & (gbw > 0)
+        return np.divide(self.prof.tp_ref_bw, gbw,
+                         out=np.ones_like(gbw), where=ok)
+
+    def _chain_times(self, perm: np.ndarray, csel) -> np.ndarray:
+        src = perm[self.idx.pos_pp_src[:, csel]]
+        dst = perm[self.idx.pos_pp_dst[:, csel]]
+        t = self._hop_cost[src[0], dst[0]]
+        for x in range(1, self.conf.pp - 1):
+            t = t + self._hop_cost[src[x], dst[x]]
+        return t
+
+    def _dp0_times(self, perm: np.ndarray, ysel) -> np.ndarray:
+        # Specialised hier_allreduce_batch with pair matrices and ring
+        # coefficients hoisted to __init__; arithmetic is identical (see that
+        # function for the derivation).  Size-1 node clusters / single-node
+        # groups fall out as coef 0 / inf bandwidth -> 0 seconds.
+        ids = perm[self.idx.pos_dp0[ysel]]
+        ii, jj = ids[:, :, None], ids[:, None, :]
+        sym = self._sym_intra[ii, jj]
+        member_min = sym.min(axis=2)
+        # sym is finite exactly on distinct same-node pairs, so the same-node
+        # mask falls out of the float gather (+1 restores the self member)
+        same = np.isfinite(sym)
+        counts = same.sum(axis=2) + 1
+        intra = (self._intra_coef[counts] / member_min).max(axis=1)
+        is_rep = ~(same & self._jlt_dp).any(axis=2)
+        n_reps = is_rep.sum(axis=1)
+        pair = is_rep[:, :, None] & is_rep[:, None, :]
+        rep_min = np.where(pair, self._bw_noself[ii, jj], np.inf) \
+            .min(axis=(1, 2))
+        inter = self._inter_coef[n_reps] / rep_min
+        return intra + inter
+
+    # -- scoring --
+
+    def _combine(self, tp_vals, chain_vals, dp0_vals) -> float:
+        conf, prof = self.conf, self.prof
+        c = prof.c_fwd + prof.c_bwd
+        scale = 1.0 if conf.tp == 1 else float(max(1.0, tp_vals.max()))
+        t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * scale
+        t_pp = 0.0 if conf.pp == 1 else float(max(0.0, chain_vals.max()))
+        t_bubble = conf.pp * (c + t_tp) + t_pp
+        t_straggler = (conf.pp - 1) * (c + t_tp)
+        t_dp = float(max(0.0, dp0_vals.max()))
+        return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
+
+    def score(self, perm: np.ndarray) -> float:
+        """Full evaluation of ``perm``; (re)initialises the caches.
+
+        Returns the same value as
+        ``pipette_latency(conf, perm_to_mapping(perm, conf), bw, prof, spec)``.
+        """
+        conf = self.conf
+        perm = np.asarray(perm, dtype=np.intp)
+        self._tp_vals = (self._tp_scales(perm, slice(None))
+                         if conf.tp > 1 else np.ones(1))
+        self._chain_vals = (self._chain_times(perm, slice(None))
+                            if conf.pp > 1 else np.zeros(1))
+        self._dp0_vals = self._dp0_times(perm, slice(None))
+        return self._combine(self._tp_vals, self._chain_vals, self._dp0_vals)
+
+    def propose(self, cand: np.ndarray, touched: np.ndarray):
+        """Score candidate ``cand`` that differs from the committed
+        permutation only at positions ``touched``.
+
+        Only the groups intersecting ``touched`` are re-gathered; the rest
+        come from the caches filled by the last ``score()``/``commit()``.
+
+        Returns:
+            ``(value, pending)`` — ``value`` is the candidate's latency and
+            ``pending`` the cache state to pass to :meth:`commit` if the move
+            is accepted.
+        """
+        conf = self.conf
+        tp, nc = conf.tp, conf.tp * conf.dp
+        lo, hi, n_t = int(touched[0]), int(touched[-1]), len(touched)
+        span = hi - lo + 1 == n_t    # contiguous (migration/reverse) or swap
+
+        tp_vals = self._tp_vals
+        if tp > 1:
+            if span:
+                gidx = slice(lo // tp, hi // tp + 1)
+            else:                    # swap: at most two groups
+                gi, gj = lo // tp, hi // tp
+                gidx = np.array((gi,) if gi == gj else (gi, gj))
+            tp_vals = self._tp_vals.copy()
+            tp_vals[gidx] = self._tp_scales(cand, gidx)
+
+        chain_vals = self._chain_vals
+        if conf.pp > 1:
+            if span:
+                if n_t >= nc:
+                    cidx = slice(None)
+                elif lo // nc == hi // nc:     # span inside one stage block
+                    cidx = slice(lo % nc, hi % nc + 1)
+                else:       # a span shorter than nc has distinct residues
+                    cidx = touched % nc
+            else:
+                ci, cj = lo % nc, hi % nc
+                cidx = np.array((ci,) if ci == cj else (ci, cj))
+            chain_vals = self._chain_vals.copy()
+            chain_vals[cidx] = self._chain_times(cand, cidx)
+
+        dp0_vals = self._dp0_vals
+        if lo < nc:                  # move touches stage-0 positions
+            if span:
+                hi0 = min(hi, nc - 1)
+                if hi0 - lo + 1 >= tp:
+                    ysel = slice(None)
+                elif lo // tp == hi0 // tp:    # span inside one tp block
+                    ysel = slice(lo % tp, hi0 % tp + 1)
+                else:
+                    ysel = np.arange(lo, hi0 + 1) % tp
+            else:
+                yi = lo % tp
+                if hi < nc:
+                    yj = hi % tp
+                    ysel = np.array((yi,) if yi == yj else (yi, yj))
+                else:
+                    ysel = np.array((yi,))
+            dp0_vals = self._dp0_vals.copy()
+            dp0_vals[ysel] = self._dp0_times(cand, ysel)
+
+        val = self._combine(tp_vals, chain_vals, dp0_vals)
+        return val, (tp_vals, chain_vals, dp0_vals)
+
+    def commit(self, pending) -> None:
+        """Promote a :meth:`propose` result to the committed state."""
+        self._tp_vals, self._chain_vals, self._dp0_vals = pending
+
+
+# ---------------------------------------------------------------------------
+# annealing drivers
+# ---------------------------------------------------------------------------
 
 def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
            objective: Optional[Callable[[np.ndarray], float]] = None,
            time_limit_s: float = 2.0, max_iters: int = 20_000,
            alpha: float = 0.999, seed: int = 0,
-           init_perm: Optional[np.ndarray] = None) -> SAResult:
+           init_perm: Optional[np.ndarray] = None,
+           engine: Optional[DedicationEngine] = None) -> SAResult:
+    """Simulated-annealing worker dedication (Algorithm 1, line 7).
+
+    Args:
+        conf: parallelism configuration to dedicate workers for.
+        bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
+        prof: profiled per-microbatch quantities.
+        spec: cluster description.
+        objective: optional custom ``perm -> cost``; when given, the generic
+            (non-incremental) path is used.  Default scores with the
+            incremental :class:`DedicationEngine` — same values, ~10-100x
+            more moves/sec.
+        time_limit_s: wall-clock budget.
+        max_iters: iteration cap (keeps tests fast).
+        alpha: geometric temperature decay per move.
+        seed: RNG seed; runs are deterministic given (seed, inputs).
+        init_perm: starting permutation (identity when ``None``).
+        engine: reuse a pre-built engine (e.g. shared index tensors).
+
+    Returns:
+        :class:`SAResult` with the best mapping found and its trace.
+    """
     rng = np.random.default_rng(seed)
     n = conf.n_gpus
     perm = np.arange(n) if init_perm is None else init_perm.copy()
 
-    if objective is None:
-        def objective(p):
-            return pipette_latency(conf, perm_to_mapping(p, conf), bw, prof, spec)
+    use_engine = objective is None
+    if use_engine:
+        if engine is None:
+            engine = DedicationEngine(conf, bw, prof, spec)
+        cur = engine.score(perm)
+    else:
+        cur = objective(perm)
 
-    cur = objective(perm)
     best_perm, best = perm.copy(), cur
     # initial temperature from the spread of a few random proposals
-    probes = [abs(objective(_move(perm, rng)) - cur) for _ in range(8)]
+    probes = []
+    for _ in range(8):
+        cand, touched = _move_span(perm, rng)
+        val = engine.propose(cand, touched)[0] if use_engine \
+            else objective(cand)
+        probes.append(abs(val - cur))
     temp = max(max(probes), cur * 1e-3, 1e-12)
 
     t0 = time.perf_counter()
     it = 0
     trace = [(0, best)]
     while it < max_iters and (time.perf_counter() - t0) < time_limit_s:
-        cand = _move(perm, rng)
-        val = objective(cand)
+        cand, touched = _move_span(perm, rng)
+        if use_engine:
+            val, pending = engine.propose(cand, touched)
+        else:
+            val = objective(cand)
         delta = val - cur
-        if delta <= 0 or rng.random() < np.exp(-delta / max(temp, 1e-15)):
+        if delta <= 0 or rng.random() < math.exp(-delta / max(temp, 1e-15)):
             perm, cur = cand, val
+            if use_engine:
+                engine.commit(pending)
             if cur < best:
                 best_perm, best = perm.copy(), cur
                 trace.append((it, best))
@@ -89,3 +438,43 @@ def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
         it += 1
     return SAResult(perm_to_mapping(best_perm, conf), best_perm, best, it,
                     time.perf_counter() - t0, trace)
+
+
+def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
+                      spec: ClusterSpec, *, n_chains: int = 4,
+                      time_limit_s: float = 2.0, max_iters: int = 20_000,
+                      alpha: float = 0.999, seed: int = 0,
+                      init_perm: Optional[np.ndarray] = None,
+                      engine: Optional[DedicationEngine] = None) -> SAResult:
+    """Best-of-``n_chains`` independent annealing restarts.
+
+    The wall-clock and iteration budgets are split evenly across chains, so
+    the total cost matches a single :func:`anneal` call with the same
+    budgets.  Chain ``k`` runs with seed ``seed * 100003 + k``, making the
+    whole driver deterministic in ``seed``.
+
+    Returns:
+        :class:`SAResult` of the winning chain, with ``iters``/``seconds``
+        summed over all chains and ``chain_latencies`` listing every chain's
+        best.
+    """
+    if n_chains < 1:
+        raise ValueError("n_chains must be >= 1")
+    if engine is None:
+        engine = DedicationEngine(conf, bw, prof, spec)
+    per_t = time_limit_s / n_chains
+    per_it = max(1, max_iters // n_chains)
+    best: Optional[SAResult] = None
+    iters, seconds, lats = 0, 0.0, []
+    for k in range(n_chains):
+        res = anneal(conf, bw, prof, spec, time_limit_s=per_t,
+                     max_iters=per_it, alpha=alpha,
+                     seed=seed * 100003 + k, init_perm=init_perm,
+                     engine=engine)
+        iters += res.iters
+        seconds += res.seconds
+        lats.append(res.latency)
+        if best is None or res.latency < best.latency:
+            best = res
+    return SAResult(best.mapping, best.perm, best.latency, iters, seconds,
+                    best.trace, chain_latencies=lats)

@@ -4,7 +4,10 @@
 memory-efficient 1F1B exposes the inter-stage P2P hidden critical path
 (n_mb/pp) times, the DP all-reduce of the *first* stage is the only one on
 the critical path, and every communication term is evaluated on the
-*profiled* bandwidth matrix.
+*profiled* bandwidth matrix.  The hot path is fully vectorized (batched
+NumPy group gathers + axis reductions); the original pure-Python loop
+implementation is kept as ``pipette_latency_ref`` and is the bit-exact
+oracle for the equivalence tests and benchmarks.
 
 ``amp_latency`` — the prior art's model (Eq. 1): GPipe-flavoured critical
 path (P2P counted once) with document-specified nominal bandwidths.
@@ -13,15 +16,45 @@ from __future__ import annotations
 
 import numpy as np
 
-from .cluster import ClusterSpec, min_group_bw, ring_allreduce_time
-from .simulator import Conf, Profile, dp_allreduce_times
+from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
+                      ring_allreduce_time)
+from .simulator import (Conf, Profile, dp_allreduce_times,
+                        dp_allreduce_times_ref)
 
 
 def _tp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
               spec: ClusterSpec, ref_bw: float) -> float:
     """Profiled slowdown of the slowest tensor-parallel group vs the nominal
     intra-node bandwidth the per-microbatch T_tp was profiled at.  Keeps the
-    estimator honest when a mapping strands a TP group across nodes."""
+    estimator honest when a mapping strands a TP group across nodes.
+
+    Vectorized: all ``pp * dp`` TP groups are gathered into one
+    ``(pp*dp, tp, tp)`` bandwidth tensor and min-reduced at once.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
+        spec: cluster description (unused beyond the signature contract).
+        ref_bw: bandwidth the per-microbatch T_tp was profiled at.
+
+    Returns:
+        Scale >= 1.0 to apply to the profiled T_tp.
+    """
+    if conf.tp == 1:
+        return 1.0
+    groups = np.asarray(mapping, dtype=np.intp).transpose(0, 2, 1) \
+        .reshape(conf.pp * conf.dp, conf.tp)
+    gbw = min_group_bw_batch(bw, groups)
+    ok = np.isfinite(gbw) & (gbw > 0)
+    with np.errstate(divide="ignore"):
+        scales = np.where(ok, ref_bw / gbw, 1.0)
+    return float(max(1.0, scales.max()))
+
+
+def _tp_scale_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                  spec: ClusterSpec, ref_bw: float) -> float:
+    """Reference loop implementation of :func:`_tp_scale` (oracle)."""
     if conf.tp == 1:
         return 1.0
     worst = 1.0
@@ -36,7 +69,36 @@ def _tp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
 
 def _t_pp_chain(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                 prof: Profile) -> float:
-    """Eq. 5: slowest end-to-end pipeline chain, fwd+bwd message per hop."""
+    """Eq. 5: slowest end-to-end pipeline chain, fwd+bwd message per hop.
+
+    Vectorized: hop bandwidths for all ``tp * dp`` chains are gathered as a
+    ``(pp-1, tp*dp)`` tensor; the per-chain sum accumulates hop by hop in the
+    same left-to-right order as the reference so results are bit-identical.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
+        prof: profiled quantities (uses ``msg_pp``).
+
+    Returns:
+        Seconds of the slowest chain; 0.0 when ``pp == 1``.
+    """
+    if conf.pp == 1:
+        return 0.0
+    m = np.asarray(mapping, dtype=np.intp)
+    src = m[:-1].reshape(conf.pp - 1, conf.tp * conf.dp)
+    dst = m[1:].reshape(conf.pp - 1, conf.tp * conf.dp)
+    hop = bw[src, dst]
+    t = np.zeros(conf.tp * conf.dp)
+    for x in range(conf.pp - 1):
+        t = t + 2.0 * prof.msg_pp / hop[x]
+    return float(max(0.0, t.max()))
+
+
+def _t_pp_chain_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                    prof: Profile) -> float:
+    """Reference loop implementation of :func:`_t_pp_chain` (oracle)."""
     if conf.pp == 1:
         return 0.0
     worst = 0.0
@@ -58,7 +120,19 @@ def _t_dp_first_stage(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
 
 def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                     prof: Profile, spec: ClusterSpec) -> float:
-    """Eq. 3-4: T = T_bubble * (n_mb / pp) + T_straggler + T_dp."""
+    """Eq. 3-4: T = T_bubble * (n_mb / pp) + T_straggler + T_dp.
+
+    Args:
+        conf: parallelism configuration (pp, tp, dp, microbatching).
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
+        prof: profiled per-microbatch quantities (:class:`Profile`).
+        spec: cluster description.
+
+    Returns:
+        Estimated seconds per training iteration.  Uses the vectorized
+        group reductions; bit-identical to :func:`pipette_latency_ref`.
+    """
     c = prof.c_fwd + prof.c_bwd
     t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * _tp_scale(conf, mapping, bw,
                                                        spec, prof.tp_ref_bw)
@@ -69,9 +143,36 @@ def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
 
 
+def pipette_latency_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                        prof: Profile, spec: ClusterSpec) -> float:
+    """Pure-Python reference scorer (the pre-vectorization implementation).
+
+    Kept as the oracle for equivalence tests and the moves/sec benchmark
+    baseline; semantics identical to :func:`pipette_latency`.
+    """
+    c = prof.c_fwd + prof.c_bwd
+    t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * _tp_scale_ref(
+        conf, mapping, bw, spec, prof.tp_ref_bw)
+    t_pp = _t_pp_chain_ref(conf, mapping, bw, prof)
+    t_bubble = conf.pp * (c + t_tp) + t_pp
+    t_straggler = (conf.pp - 1) * (c + t_tp)
+    t_dp = float(dp_allreduce_times_ref(conf, mapping, bw, prof, spec)[0])
+    return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
+
+
 def amp_latency(conf: Conf, mapping: np.ndarray, spec: ClusterSpec,
                 prof: Profile) -> float:
-    """Eq. 1 with nominal (document-specified) bandwidths."""
+    """Eq. 1 with nominal (document-specified) bandwidths.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: unused (AMP is mapping-blind); kept for signature parity.
+        spec: cluster description (nominal ``inter_bw`` is used).
+        prof: profiled per-microbatch quantities.
+
+    Returns:
+        Estimated seconds per iteration under the GPipe-flavoured model.
+    """
     c = prof.c_fwd + prof.c_bwd
     t_tp = prof.t_tp_fwd + prof.t_tp_bwd
     # nominal uniform matrix: intra for same node, inter otherwise
@@ -84,7 +185,16 @@ def amp_latency(conf: Conf, mapping: np.ndarray, spec: ClusterSpec,
 
 def varuna_latency(conf: Conf, spec: ClusterSpec, prof: Profile) -> float:
     """Varuna-style estimate: pipeline-only focus, nominal bandwidths,
-    memory-unaware (used to rank its candidate configs)."""
+    memory-unaware (used to rank its candidate configs).
+
+    Args:
+        conf: parallelism configuration (tp is assumed 1 by the caller).
+        spec: cluster description (nominal ``inter_bw`` is used).
+        prof: profiled per-microbatch quantities.
+
+    Returns:
+        Estimated seconds per iteration.
+    """
     c = prof.c_fwd + prof.c_bwd
     t_pp_hop = 2.0 * prof.msg_pp / spec.inter_bw
     bubble = (conf.pp - 1) * (c + t_pp_hop)

@@ -126,6 +126,18 @@ class MemoryEstimator:
 
 def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
                     n_layers: int = 10 ** 9) -> List[Conf]:
+    """All valid (pp, tp, dp, bs_micro) with ``pp*tp*dp == n_gpus``.
+
+    Args:
+        n_gpus: total GPU count to factorize.
+        bs_global: global batch size (dp must divide it; every divisor of
+            the minibatch becomes a microbatch candidate).
+        max_tp: optional upper bound on tensor parallelism (0 = unbounded).
+        n_layers: pp may not exceed the layer count.
+
+    Returns:
+        List of :class:`~repro.core.simulator.Conf`, unpruned.
+    """
     out = []
     for pp in range(1, n_gpus + 1):
         if n_gpus % pp or pp > n_layers:
@@ -168,6 +180,22 @@ def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
                          fit_nodes: int = 4, steps: int = 20_000,
                          hidden: int = 200, depth: int = 5,
                          seed: int = 0, residual: bool = False) -> MemoryEstimator:
+    """Train the §VI MLP memory estimator on small-scale profiles.
+
+    Args:
+        workloads: workloads to profile (configs on <= ``fit_nodes`` nodes).
+        spec: cluster description.
+        fit_nodes: profiling budget in nodes (paper: 4 nodes / 32 GPUs);
+            the estimator must extrapolate beyond it.
+        steps / hidden / depth: MLP training schedule and architecture
+            (paper: 5 layers x 200 hidden units).
+        seed: init/training seed.
+        residual: beyond-paper variant — learn log(actual / analytical)
+            instead of log(actual), anchoring extrapolation.
+
+    Returns:
+        Fitted :class:`MemoryEstimator`.
+    """
     import jax
     import jax.numpy as jnp
     from .mlp import init_mlp, train_mlp
@@ -189,6 +217,7 @@ def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
 
 
 def mape(pred: Iterable[float], true: Iterable[float]) -> float:
+    """Mean absolute percentage error (%), the paper's estimator metric."""
     p = np.asarray(list(pred), float)
     t = np.asarray(list(true), float)
     return float(np.mean(np.abs(p - t) / t) * 100.0)

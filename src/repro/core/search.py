@@ -4,17 +4,23 @@ Enumerates (pp, tp, dp) with pp*tp*dp = G and every microbatch divisor,
 prunes configurations the memory estimator rejects, runs SA worker
 dedication on each survivor scored by the latency estimator, and returns
 the best (Conf, Map, T) plus a ranked list (for the Fig. 5b style top-k
-analyses)."""
+analyses).
+
+The SA stage uses the incremental :class:`~repro.core.dedication.
+DedicationEngine`; its permutation-position index tensors depend only on the
+(pp, tp, dp) shape, so they are built once per shape and shared across every
+microbatch variant of that shape (``enumerate_confs`` yields many)."""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .cluster import ClusterSpec
-from .dedication import SAResult, anneal
+from .dedication import (DedicationEngine, GroupIndex, SAResult, anneal,
+                         anneal_multistart)
 from .latency import pipette_latency
 from .memory import MemoryEstimator, enumerate_confs
 from .simulator import Conf, Profile, Workload, build_profile, default_mapping
@@ -22,6 +28,14 @@ from .simulator import Conf, Profile, Workload, build_profile, default_mapping
 
 @dataclass
 class Candidate:
+    """One surviving configuration: (Conf, Map, T) plus the memory estimate.
+
+    Attributes:
+        conf: parallelism configuration.
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        latency: estimated seconds/iteration (Eq. 3-6).
+        mem_pred: predicted peak bytes/GPU (``nan`` without an estimator).
+    """
     conf: Conf
     mapping: np.ndarray
     latency: float
@@ -30,11 +44,27 @@ class Candidate:
 
 @dataclass
 class SearchResult:
+    """Ranked output of :func:`configure`.
+
+    Attributes:
+        best: lowest-latency candidate (``None`` if nothing survived).
+        ranked: all candidates, fastest first.
+        overhead: timing breakdown — ``total_s``, ``sa_s``,
+            ``mem_estimator_s``, ``n_candidates``.
+
+    Example:
+        >>> res = configure(w, spec, bw, sa_seconds=0.2)
+        >>> res.best.conf.n_gpus == spec.n_gpus
+        True
+        >>> [str(c.conf) for c in res.top(3)]       # Fig. 5b style top-k
+        ['pp4·tp8·dp2·mb2(n_mb=16)', ...]
+    """
     best: Optional[Candidate]
     ranked: List[Candidate]
     overhead: dict = field(default_factory=dict)
 
     def top(self, k: int = 10) -> List[Candidate]:
+        """First ``k`` candidates by estimated latency (fastest first)."""
         return self.ranked[:k]
 
 
@@ -42,17 +72,40 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
               estimator: Optional[MemoryEstimator] = None,
               mem_limit: Optional[float] = None,
               sa_seconds: float = 1.0, sa_iters: int = 8_000,
+              n_chains: int = 1,
               max_micro: int = 16, fixed_micro: Optional[int] = None,
               seed: int = 0,
               dedicate: bool = True) -> SearchResult:
-    """Pipette (Algorithm 1).  ``dedicate=False`` gives the PPT-L ablation
-    (latency+memory estimators only, identity mapping)."""
+    """Pipette (Algorithm 1): enumerate -> memory-prune -> dedicate -> rank.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description.
+        bw: ``(G, G)`` profiled bandwidth matrix from
+            :func:`~repro.core.cluster.profile_bandwidth`.
+        estimator: optional MLP memory estimator; prunes configs predicted
+            to exceed ``mem_limit * soft_margin``.
+        mem_limit: per-GPU memory budget in bytes (default ``spec.gpu_mem``).
+        sa_seconds / sa_iters: total SA budget per candidate (split across
+            chains when ``n_chains > 1``).
+        n_chains: independent SA restarts per candidate, best-of
+            (see :func:`~repro.core.dedication.anneal_multistart`).
+        max_micro: skip configurations with ``bs_micro`` above this.
+        fixed_micro: restrict to one microbatch size (ablations).
+        seed: RNG seed; the whole search is deterministic given it.
+        dedicate: ``False`` gives the PPT-L ablation (latency+memory
+            estimators only, identity mapping).
+
+    Returns:
+        :class:`SearchResult` with the best candidate and the full ranking.
+    """
     t0 = time.perf_counter()
     mem_limit = mem_limit if mem_limit is not None else spec.gpu_mem
     g = spec.n_gpus
     cands: List[Candidate] = []
     mem_time = 0.0
     sa_time = 0.0
+    index_cache: Dict[Tuple[int, int, int], GroupIndex] = {}
 
     for conf in enumerate_confs(g, w.bs_global, n_layers=w.cfg.n_layers):
         if conf.bs_micro > max_micro:
@@ -69,9 +122,21 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
         else:
             pred = float("nan")
         if dedicate:
+            shape = (conf.pp, conf.tp, conf.dp)
+            idx = index_cache.get(shape)
+            if idx is None:
+                idx = index_cache[shape] = GroupIndex.build(conf)
+            engine = DedicationEngine(conf, bw, prof, spec, index=idx)
             ts = time.perf_counter()
-            res = anneal(conf, bw, prof, spec, time_limit_s=sa_seconds,
-                         max_iters=sa_iters, seed=seed)
+            if n_chains > 1:
+                res = anneal_multistart(conf, bw, prof, spec,
+                                        n_chains=n_chains,
+                                        time_limit_s=sa_seconds,
+                                        max_iters=sa_iters, seed=seed,
+                                        engine=engine)
+            else:
+                res = anneal(conf, bw, prof, spec, time_limit_s=sa_seconds,
+                             max_iters=sa_iters, seed=seed, engine=engine)
             sa_time += time.perf_counter() - ts
             cands.append(Candidate(conf, res.mapping, res.latency, pred))
         else:

@@ -19,7 +19,8 @@ import numpy as np
 
 from ..models.config import ModelConfig
 from . import flops as F
-from .cluster import ClusterSpec, min_group_bw, ring_allreduce_time
+from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
+                      ring_allreduce_time)
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +66,14 @@ class Workload:
 
 def default_mapping(conf: Conf) -> np.ndarray:
     """Identity (node-major) worker dedication: tp contiguous, then dp,
-    then pp — the standard Megatron-LM order."""
+    then pp — the standard Megatron-LM order.
+
+    Args:
+        conf: parallelism configuration.
+
+    Returns:
+        ``(pp, tp, dp)`` integer mapping with GPU ids ``0..n_gpus-1``.
+    """
     g = np.arange(conf.n_gpus)
     # worker (x, y, z) -> gpu x*(dp*tp) + z*tp + y
     return g.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
@@ -88,6 +96,21 @@ class Profile:
 
 
 def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
+    """Derive the profiled per-microbatch quantities for one configuration.
+
+    Stands in for the paper's on-cluster profiling stage: per-microbatch
+    fwd/bwd compute (with the GEMM batch-efficiency penalty for tiny
+    microbatches), per-microbatch TP all-reduce time at the nominal group
+    bandwidth, and the inter-stage / data-parallel message sizes.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description.
+        conf: parallelism configuration being profiled.
+
+    Returns:
+        :class:`Profile` consumed by the latency estimators and simulator.
+    """
     cfg = w.cfg
     layers_stage = -(-cfg.n_layers // conf.pp)
     tokens_mb = conf.bs_micro * w.seq
@@ -140,10 +163,88 @@ def _one_f_one_b_order(pp: int, s: int, n_mb: int):
     return ops
 
 
+def hier_allreduce_batch(ids: np.ndarray, bw: np.ndarray, msg_bytes: float,
+                         spec: ClusterSpec) -> np.ndarray:
+    """Batched hierarchical-ring all-reduce time for many groups at once.
+
+    Each row of ``ids`` is one data-parallel communicator group.  The
+    hierarchical schedule is the reference one: a phases=4 reduce-scatter /
+    all-gather ring inside every node-local sub-group (bottlenecked by that
+    sub-group's slowest link), then a phases=2 ring across one representative
+    GPU per node (the first group member on each node).
+
+    Args:
+        ids: ``(n_groups, m)`` GPU ids, one communicator group per row.
+        bw: ``(G, G)`` bandwidth matrix in bytes/s.
+        msg_bytes: gradient bytes each rank contributes.
+        spec: cluster description (for the GPU -> node map).
+
+    Returns:
+        ``(n_groups,)`` seconds, bit-identical to the scalar reference
+        (``dp_allreduce_times_ref``'s inner loop) applied per row.
+    """
+    ids = np.asarray(ids, dtype=np.intp)
+    n_groups, m = ids.shape
+    if m <= 1:
+        return np.zeros(n_groups)
+    sub = bw[ids[:, :, None], ids[:, None, :]]            # (n_groups, m, m)
+    node = ids // spec.gpus_per_node
+    same = node[:, :, None] == node[:, None, :]
+    eye = np.eye(m, dtype=bool)[None, :, :]
+    off = same & ~eye
+    # Per-member min over same-node links in both directions; the member that
+    # attains its node-cluster's global min reproduces the reference ring time
+    # exactly (the ring coefficient is constant inside a cluster).
+    masked = np.where(off, sub, np.inf)
+    member_min = np.minimum(masked.min(axis=2), masked.min(axis=1))
+    counts = same.sum(axis=2)                              # (n_groups, m)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        intra_vals = 4 * (counts - 1) / counts * msg_bytes / member_min
+    intra_t = np.where(counts > 1, intra_vals, 0.0).max(axis=1)
+
+    # Representatives: first group member on each node (insertion order of the
+    # reference dict) — membership matters because rep-to-rep links differ.
+    j_lt_i = np.arange(m)[None, None, :] < np.arange(m)[None, :, None]
+    is_rep = ~(same & j_lt_i).any(axis=2)
+    n_reps = is_rep.sum(axis=1)
+    pair = is_rep[:, :, None] & is_rep[:, None, :] & ~eye
+    rep_min = np.where(pair, sub, np.inf).min(axis=(1, 2))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inter_vals = 2 * (n_reps - 1) / n_reps * msg_bytes / rep_min
+    inter_t = np.where(n_reps > 1, inter_vals, 0.0)
+    return intra_t + inter_t
+
+
 def dp_allreduce_times(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                        prof: Profile, spec: ClusterSpec) -> np.ndarray:
     """Hierarchical-ring DP all-reduce seconds per pipeline stage (Eq. 6
-    structure, evaluated on an arbitrary bandwidth matrix)."""
+    structure, evaluated on an arbitrary bandwidth matrix).
+
+    Vectorized: all ``pp * tp`` data-parallel groups are gathered and reduced
+    in one batch (see :func:`hier_allreduce_batch`); per stage the slowest
+    tensor-parallel slice wins.  Matches :func:`dp_allreduce_times_ref`
+    bit-for-bit.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        bw: ``(G, G)`` bandwidth matrix in bytes/s.
+        prof: profiled per-microbatch quantities (uses ``msg_dp``).
+        spec: cluster description.
+
+    Returns:
+        ``(pp,)`` all-reduce seconds per pipeline stage.
+    """
+    ids = np.asarray(mapping, dtype=np.intp).reshape(conf.pp * conf.tp,
+                                                     conf.dp)
+    t = hier_allreduce_batch(ids, np.asarray(bw), prof.msg_dp, spec)
+    return np.maximum(t.reshape(conf.pp, conf.tp).max(axis=1), 0.0)
+
+
+def dp_allreduce_times_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                           prof: Profile, spec: ClusterSpec) -> np.ndarray:
+    """Reference (pure-Python loop) implementation of
+    :func:`dp_allreduce_times`; kept as the equivalence/benchmark oracle."""
     out = np.zeros(conf.pp)
     for x in range(conf.pp):
         worst = 0.0
@@ -172,26 +273,41 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                        prof: Profile, spec: ClusterSpec, *,
                        jitter: float = 0.015, contention: float = 0.05,
                        seed: int = 0) -> Dict:
-    """Event-driven 1F1B iteration.  Returns dict with 'total' seconds."""
+    """Event-driven 1F1B iteration on an arbitrary bandwidth matrix.
+
+    Models what the first-order estimators do not: per-link p2p chains,
+    fwd/bwd link contention, per-op jitter and warmup transients.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        bw: bandwidth matrix to "run" on (usually the ground truth).
+        prof: profiled per-microbatch quantities.
+        spec: cluster description.
+        jitter: per-op lognormal-ish duration noise.
+        contention: fractional slowdown of contended steady-state hops.
+        seed: RNG seed for the jitter.
+
+    Returns:
+        Dict with ``total`` seconds plus per-stage/per-link breakdowns
+        (``stage_finish``, ``t_dp``, ``t_pp``).
+    """
     pp, tp, dp, n_mb = conf.pp, conf.tp, conf.dp, conf.n_mb
     rng = np.random.default_rng(seed * 131071 + conf.n_gpus)
 
+    m_idx = np.asarray(mapping, dtype=np.intp)
+
     # per-replica p2p link times between adjacent stages (slowest tp pair)
     t_pp = np.zeros((dp, max(pp - 1, 1)))
-    for z in range(dp):
-        for x in range(pp - 1):
-            link = min(bw[int(mapping[x, y, z]), int(mapping[x + 1, y, z])]
-                       for y in range(tp))
-            t_pp[z, x] = prof.msg_pp / link
+    if pp > 1:
+        link = bw[m_idx[:-1], m_idx[1:]].min(axis=1)      # (pp-1, dp)
+        t_pp = (prof.msg_pp / link).T
 
     # actual TP time uses true intra-group links (model uses nominal)
-    t_tpf = np.zeros((dp, pp))
-    for z in range(dp):
-        for x in range(pp):
-            group = [int(mapping[x, y, z]) for y in range(tp)]
-            gbw = min_group_bw(bw, group)
-            scale = prof.tp_ref_bw / gbw if np.isfinite(gbw) and gbw > 0 else 1.0
-            t_tpf[z, x] = prof.t_tp_fwd * scale
+    groups = m_idx.transpose(0, 2, 1).reshape(pp * dp, tp)
+    gbw = min_group_bw_batch(bw, groups)
+    scale = np.where(np.isfinite(gbw) & (gbw > 0), prof.tp_ref_bw / gbw, 1.0)
+    t_tpf = (prof.t_tp_fwd * scale).reshape(pp, dp).T
 
     finish_stage = np.zeros((dp, pp))
     for z in range(dp):
@@ -251,7 +367,19 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
 
 def measure(conf: Conf, mapping: np.ndarray, w: Workload, spec: ClusterSpec,
             bw_true: np.ndarray, *, seed: int = 0) -> float:
-    """'Run' one training iteration on the simulated cluster -> seconds."""
+    """'Run' one training iteration on the simulated cluster.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        w: workload (profiled on the fly via :func:`build_profile`).
+        spec: cluster description.
+        bw_true: ground-truth bandwidth matrix.
+        seed: simulator jitter seed.
+
+    Returns:
+        Measured seconds for the iteration.
+    """
     prof = build_profile(w, spec, conf)
     return simulate_iteration(conf, mapping, bw_true, prof, spec,
                               seed=seed)["total"]

@@ -3,6 +3,7 @@ objective improvement, and end-to-end behaviour on a heterogeneous
 cluster."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (MID_RANGE, Conf, Workload, anneal, build_profile,

@@ -3,6 +3,7 @@ baseline's systematic underestimation, MLP fit quality, and config
 enumeration properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (MID_RANGE, Conf, Workload, analytical_estimate,

@@ -2,6 +2,7 @@
 profile model (hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import MID_RANGE, Conf, Workload, build_profile

@@ -1,0 +1,141 @@
+"""Vectorized dedication engine: bit-exact equivalence against the
+pure-Python reference scorer, incremental delta-scoring correctness, and
+multi-start determinism."""
+import numpy as np
+import pytest
+
+from repro.core import (MID_RANGE, Conf, Workload, anneal, anneal_multistart,
+                        build_profile, dp_allreduce_times,
+                        dp_allreduce_times_ref, pipette_latency,
+                        pipette_latency_ref, true_bandwidth_matrix)
+from repro.core.dedication import DedicationEngine, GroupIndex, _move_span, \
+    perm_to_mapping
+from repro.models.config import ModelConfig
+
+GPT = ModelConfig(name="g", family="dense", n_layers=24, d_model=1920,
+                  n_heads=20, n_kv_heads=20, d_ff=7680, vocab_size=51200)
+
+
+def _random_case(rng, trial):
+    """One random (spec, conf, bw, prof, mapping) triple."""
+    spec = MID_RANGE.with_nodes(int(rng.choice([1, 2, 4, 8])))
+    g = spec.n_gpus
+    shapes = [(pp, tp, g // (pp * tp))
+              for pp in (1, 2, 4) for tp in (1, 2, 4, 8)
+              if g % (pp * tp) == 0]
+    pp, tp, dp = shapes[rng.integers(len(shapes))]
+    conf = Conf(pp, tp, dp, 2, 16 * dp)
+    bw = true_bandwidth_matrix(spec, day=trial % 4)
+    prof = build_profile(Workload(GPT, 512, conf.bs_global), spec, conf)
+    mapping = perm_to_mapping(rng.permutation(g), conf)
+    return spec, conf, bw, prof, mapping
+
+
+def test_vectorized_latency_matches_reference_exactly():
+    """>= 50 random (cluster, conf, mapping) triples, tolerance 0."""
+    rng = np.random.default_rng(0)
+    for trial in range(60):
+        spec, conf, bw, prof, mapping = _random_case(rng, trial)
+        vec = pipette_latency(conf, mapping, bw, prof, spec)
+        ref = pipette_latency_ref(conf, mapping, bw, prof, spec)
+        assert vec == ref, (trial, str(conf), vec - ref)
+
+
+def test_vectorized_dp_allreduce_matches_reference_exactly():
+    rng = np.random.default_rng(1)
+    for trial in range(50):
+        spec, conf, bw, prof, mapping = _random_case(rng, trial)
+        vec = dp_allreduce_times(conf, mapping, bw, prof, spec)
+        ref = dp_allreduce_times_ref(conf, mapping, bw, prof, spec)
+        assert np.array_equal(vec, ref), (trial, str(conf))
+
+
+def test_engine_full_score_matches_latency():
+    rng = np.random.default_rng(2)
+    for trial in range(20):
+        spec, conf, bw, prof, _ = _random_case(rng, trial)
+        eng = DedicationEngine(conf, bw, prof, spec)
+        perm = rng.permutation(conf.n_gpus)
+        want = pipette_latency(conf, perm_to_mapping(perm, conf), bw, prof,
+                               spec)
+        assert eng.score(perm) == want
+
+
+def test_engine_delta_scoring_matches_full_rescore():
+    """Every SA move's incremental score equals a from-scratch evaluation."""
+    rng = np.random.default_rng(3)
+    for trial in range(10):
+        spec, conf, bw, prof, _ = _random_case(rng, trial)
+        eng = DedicationEngine(conf, bw, prof, spec)
+        perm = rng.permutation(conf.n_gpus)
+        eng.score(perm)
+        for _ in range(50):
+            cand, touched = _move_span(perm, rng)
+            val, pending = eng.propose(cand, touched)
+            want = pipette_latency(conf, perm_to_mapping(cand, conf), bw,
+                                   prof, spec)
+            assert val == want, (trial, str(conf), val - want)
+            if rng.random() < 0.6:          # mix accepted + rejected moves
+                eng.commit(pending)
+                perm = cand
+
+
+def test_group_index_shared_across_microbatch_variants():
+    conf_a = Conf(2, 4, 2, 1, 32)
+    conf_b = Conf(2, 4, 2, 4, 32)
+    idx = GroupIndex.build(conf_a)
+    spec = MID_RANGE.with_nodes(2)
+    bw = true_bandwidth_matrix(spec)
+    for conf in (conf_a, conf_b):
+        prof = build_profile(Workload(GPT, 512, conf.bs_global), spec, conf)
+        eng = DedicationEngine(conf, bw, prof, spec, index=idx)
+        perm = np.random.default_rng(0).permutation(conf.n_gpus)
+        want = pipette_latency(conf, perm_to_mapping(perm, conf), bw, prof,
+                               spec)
+        assert eng.score(perm) == want
+    with pytest.raises(ValueError):
+        DedicationEngine(Conf(4, 2, 2, 1, 32), bw,
+                         build_profile(Workload(GPT, 512, 32), spec,
+                                       Conf(4, 2, 2, 1, 32)),
+                         spec, index=idx)
+
+
+def test_engine_anneal_matches_generic_objective_path():
+    """The engine-driven anneal walks the exact same trajectory as the
+    generic (full-rescore) objective path: same RNG stream + bit-equal
+    scores => identical accept/reject decisions."""
+    spec = MID_RANGE.with_nodes(4)
+    conf = Conf(4, 4, 2, 2, 128)
+    bw = true_bandwidth_matrix(spec)
+    prof = build_profile(Workload(GPT, 2048, 128), spec, conf)
+
+    def objective(p):
+        return pipette_latency_ref(conf, perm_to_mapping(p, conf), bw, prof,
+                                   spec)
+
+    kw = dict(time_limit_s=60.0, max_iters=800, seed=11)
+    r_eng = anneal(conf, bw, prof, spec, **kw)
+    r_gen = anneal(conf, bw, prof, spec, objective=objective, **kw)
+    assert r_eng.latency == r_gen.latency
+    assert np.array_equal(r_eng.perm, r_gen.perm)
+
+
+def test_multistart_deterministic_and_no_worse_than_single():
+    spec = MID_RANGE.with_nodes(4)
+    conf = Conf(4, 4, 2, 2, 128)
+    bw = true_bandwidth_matrix(spec)
+    prof = build_profile(Workload(GPT, 2048, 128), spec, conf)
+    kw = dict(n_chains=3, time_limit_s=60.0, max_iters=900, seed=5)
+    a = anneal_multistart(conf, bw, prof, spec, **kw)
+    b = anneal_multistart(conf, bw, prof, spec, **kw)
+    assert a.latency == b.latency
+    assert np.array_equal(a.perm, b.perm)
+    assert a.chain_latencies == b.chain_latencies
+    assert len(a.chain_latencies) == 3
+    assert a.latency == min(a.chain_latencies)
+    # the winning chain is at least as good as chain 0 alone
+    single = anneal(conf, bw, prof, spec, time_limit_s=60.0, max_iters=300,
+                    seed=5 * 100003)
+    assert a.latency <= single.latency
+    with pytest.raises(ValueError):
+        anneal_multistart(conf, bw, prof, spec, n_chains=0)
