@@ -1,0 +1,166 @@
+"""Configurator-overhead benchmark: the batched enumerate->prune pipeline
+vs the seed's per-candidate scalar path, plus the end-to-end ``configure()``
+phase breakdown.
+
+    PYTHONPATH=src python -m benchmarks.bench_configure [--nodes 16] [--quick]
+
+Phase A times memory pruning of the whole enumeration (MID_RANGE @ 16
+nodes): the seed path paid one un-jitted one-row JAX forward per candidate
+(dispatch-dominated), the new path one jitted ``predict_batch`` call on the
+(N, F) feature matrix.  It also times profile construction the seed way
+(every enumerated conf, before the memory check) vs the new way (survivors
+only, memoized per ``(pp, tp, bs_micro)``).
+
+Phase B runs the full ``configure()`` search and prints the overhead
+breakdown, exhaustive vs ``sa_topk``.
+
+Acceptance target (ISSUE 2): >= 5x on the enumerate+prune phase.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (MID_RANGE, ProfileCache, Workload, build_profile,
+                        configure, enumerate_confs, fit_memory_estimator,
+                        true_bandwidth_matrix)
+from repro.core.memory import _features, analytical_estimate
+from repro.core.mlp import mlp_forward
+from repro.configs.gpt_paper import GPT_3_1B
+
+SEQ = 2048
+BS_GLOBAL = 256
+
+
+def scalar_predict_seed(est, cfg, conf) -> float:
+    """The seed-era ``MemoryEstimator.predict``: per-call feature build and
+    an un-jitted one-row MLP forward (one JAX dispatch per candidate)."""
+    import jax.numpy as jnp
+    x = (_features(cfg, conf) - est.x_mean) / est.x_std
+    y = float(mlp_forward(est.params,
+                          jnp.asarray(x[None], jnp.float32))[0, 0])
+    pred = float(np.exp(y * est.y_std + est.y_mean))
+    if est.residual:
+        w = Workload(cfg, est.workload_seq, conf.bs_global)
+        pred *= analytical_estimate(w, conf)
+    return pred
+
+
+def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3):
+    """Enumerate+prune wall-clock, seed scalar path vs batched path.
+
+    Yields ``(name, seconds, n_in, n_out)`` rows; the batched row is
+    steady-state (first call pays the one-off XLA compile, reported as its
+    own row)."""
+    limit = spec.gpu_mem * est.soft_margin
+
+    def enumerate_filtered():
+        return [c for c in enumerate_confs(spec.n_gpus, w.bs_global,
+                                           n_layers=w.cfg.n_layers)
+                if c.bs_micro <= max_micro]
+
+    # seed path: one JAX dispatch per enumerated candidate
+    best_scalar = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        confs = enumerate_filtered()
+        kept = [c for c in confs
+                if scalar_predict_seed(est, w.cfg, c) <= limit]
+        dt = time.perf_counter() - t0
+        best_scalar = dt if best_scalar is None else min(best_scalar, dt)
+    yield ("prune scalar-predict (seed)", best_scalar, len(confs), len(kept))
+
+    # batched path: cold call first (XLA compile), then steady state
+    t0 = time.perf_counter()
+    confs = enumerate_filtered()
+    preds = est.predict_batch(w.cfg, confs)
+    cold = time.perf_counter() - t0
+    yield ("prune batched, cold (compile)", cold, len(confs),
+           int((preds <= limit).sum()))
+    best_batch = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        confs = enumerate_filtered()
+        preds = est.predict_batch(w.cfg, confs)
+        kept_b = [c for c, k in zip(confs, preds <= limit) if k]
+        dt = time.perf_counter() - t0
+        best_batch = dt if best_batch is None else min(best_batch, dt)
+    yield ("prune batched (new)", best_batch, len(confs), len(kept_b))
+
+    # profile construction: seed built one per enumerated conf *before* the
+    # memory check; the new pipeline builds survivors only, memoized
+    t0 = time.perf_counter()
+    for c in confs:
+        build_profile(w, spec, c)
+    yield ("profiles seed (all, pre-prune)", time.perf_counter() - t0,
+           len(confs), len(confs))
+    t0 = time.perf_counter()
+    cache = ProfileCache(w, spec)
+    for c in kept_b:
+        cache.get(c)
+    yield ("profiles new (survivors, memoized)", time.perf_counter() - t0,
+           len(kept_b), len(cache._full))
+
+
+def bench_search(w, spec, est, bw, *, sa_iters: int, max_micro: int,
+                 sa_topk: int):
+    """Full ``configure()`` wall-clock and phase breakdown, exhaustive SA vs
+    the ``sa_topk`` concentration knob.  Yields ``(name, res)`` pairs."""
+    kw = dict(estimator=est, sa_seconds=60.0, sa_iters=sa_iters,
+              max_micro=max_micro, seed=0)
+    yield ("configure() exhaustive SA", configure(w, spec, bw, **kw))
+    yield (f"configure() sa_topk={sa_topk}",
+           configure(w, spec, bw, sa_topk=sa_topk, **kw))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=16,
+                    help="cluster size in 8-GPU nodes (default 16)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small estimator, tiny SA budget")
+    args = ap.parse_args()
+
+    spec = MID_RANGE.with_nodes(args.nodes)
+    w = Workload(GPT_3_1B, SEQ, BS_GLOBAL)
+    steps = 1000 if args.quick else 4000
+    t0 = time.perf_counter()
+    est = fit_memory_estimator([w], spec, fit_nodes=2, steps=steps,
+                               residual=True)
+    print(f"# estimator fit ({steps} steps): "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    print("benchmark,wall_s,n_in,n_out")
+    rows = {}
+    for name, sec, n_in, n_out in bench_prune(w, spec, est):
+        rows[name] = sec
+        print(f"{name},{sec:.4f},{n_in},{n_out}")
+    speedup = rows["prune scalar-predict (seed)"] / rows["prune batched (new)"]
+    prof_speedup = (rows["profiles seed (all, pre-prune)"]
+                    / max(rows["profiles new (survivors, memoized)"], 1e-9))
+    print(f"enumerate+prune speedup: {speedup:.1f}x")
+    print(f"profile-construction speedup: {prof_speedup:.1f}x")
+
+    print()
+    print("benchmark,total_s,sa_s,mem_estimator_s,profile_s,prescore_s,"
+          "n_enumerated,n_candidates")
+    bw = true_bandwidth_matrix(spec)
+    sa_iters = 30 if args.quick else 150
+    max_micro = 2 if args.quick else 4
+    for name, res in bench_search(w, spec, est, bw, sa_iters=sa_iters,
+                                  max_micro=max_micro, sa_topk=8):
+        o = res.overhead
+        print(f"{name},{o['total_s']:.2f},{o['sa_s']:.2f},"
+              f"{o['mem_estimator_s']:.4f},{o['profile_s']:.4f},"
+              f"{o['prescore_s']:.4f},{o['n_enumerated']},"
+              f"{o['n_candidates']}")
+
+    print()
+    verdict = "PASS" if speedup >= 5.0 else "BELOW TARGET"
+    print(f"enumerate+prune speedup {speedup:.1f}x (target >= 5x): {verdict}")
+
+
+if __name__ == "__main__":
+    main()

@@ -130,16 +130,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=8,
                     help="cluster size in 8-GPU nodes (default 8 = 64 GPUs)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: fewer moves/repeats, skip the "
+                         "slow reference-rescore configure() pass")
     args = ap.parse_args()
+
+    if args.quick:
+        move_kw = dict(ref_moves=100, engine_moves=5_000, repeats=2)
+    else:
+        move_kw = dict()
 
     print("benchmark,ref_moves_per_s,engine_moves_per_s,speedup")
     speedups = []
-    for name, r, e, s in bench_moves(args.nodes):
+    for name, r, e, s in bench_moves(args.nodes, **move_kw):
         speedups.append(s)
         print(f"{name},{r:.0f},{e:.0f},{s:.1f}x")
     print()
     print("benchmark,wall_s,best_latency_s,n_candidates")
-    cfg_rows = list(bench_configure())
+    cfg_rows = [] if args.quick else list(bench_configure())
     for name, sec, lat, n in cfg_rows:
         print(f"{name},{sec:.2f},{lat:.4f},{n}")
     if len(cfg_rows) == 2:

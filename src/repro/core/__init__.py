@@ -7,11 +7,11 @@ baselines."""
 from .cluster import (ClusterSpec, HIGH_END, MID_RANGE, TPU_POD,
                       min_group_bw, min_group_bw_batch, profile_bandwidth,
                       true_bandwidth_matrix)
-from .simulator import (Conf, Profile, Workload, build_profile,
+from .simulator import (Conf, Profile, ProfileCache, Workload, build_profile,
                         default_mapping, dp_allreduce_times,
                         dp_allreduce_times_ref, measure)
-from .latency import (amp_latency, pipette_latency, pipette_latency_ref,
-                      varuna_latency)
+from .latency import (amp_latency, default_mapping_latencies, pipette_latency,
+                      pipette_latency_ref, varuna_latency)
 from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
                      fit_memory_estimator, ground_truth_memory, mape)
 from .dedication import (DedicationEngine, GroupIndex, SAResult, anneal,

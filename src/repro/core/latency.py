@@ -16,9 +16,11 @@ from __future__ import annotations
 
 import numpy as np
 
+from typing import Sequence
+
 from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
                       ring_allreduce_time)
-from .simulator import (Conf, Profile, dp_allreduce_times,
+from .simulator import (Conf, Profile, default_mapping, dp_allreduce_times,
                         dp_allreduce_times_ref)
 
 
@@ -67,13 +69,35 @@ def _tp_scale_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     return worst
 
 
+def _pp_hop_bw(conf: Conf, mapping: np.ndarray, bw: np.ndarray) -> np.ndarray:
+    """Hop bandwidths of every pipeline chain: ``(pp-1, tp*dp)`` gather.
+
+    Pure function of the mapping and bandwidth matrix (no profile), so
+    callers scoring many microbatch variants of one shape can cache it.
+    """
+    m = np.asarray(mapping, dtype=np.intp)
+    src = m[:-1].reshape(conf.pp - 1, conf.tp * conf.dp)
+    dst = m[1:].reshape(conf.pp - 1, conf.tp * conf.dp)
+    return bw[src, dst]
+
+
+def _t_pp_from_hops(conf: Conf, hop: np.ndarray, msg_pp: float) -> float:
+    """Eq. 5 accumulation over pre-gathered hop bandwidths; the per-chain
+    sum runs hop by hop in the reference's left-to-right order so results
+    are bit-identical to :func:`_t_pp_chain_ref`."""
+    t = np.zeros(conf.tp * conf.dp)
+    for x in range(conf.pp - 1):
+        t = t + 2.0 * msg_pp / hop[x]
+    return float(max(0.0, t.max()))
+
+
 def _t_pp_chain(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                 prof: Profile) -> float:
     """Eq. 5: slowest end-to-end pipeline chain, fwd+bwd message per hop.
 
     Vectorized: hop bandwidths for all ``tp * dp`` chains are gathered as a
-    ``(pp-1, tp*dp)`` tensor; the per-chain sum accumulates hop by hop in the
-    same left-to-right order as the reference so results are bit-identical.
+    ``(pp-1, tp*dp)`` tensor (:func:`_pp_hop_bw`), then accumulated by
+    :func:`_t_pp_from_hops`.
 
     Args:
         conf: parallelism configuration.
@@ -86,14 +110,7 @@ def _t_pp_chain(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """
     if conf.pp == 1:
         return 0.0
-    m = np.asarray(mapping, dtype=np.intp)
-    src = m[:-1].reshape(conf.pp - 1, conf.tp * conf.dp)
-    dst = m[1:].reshape(conf.pp - 1, conf.tp * conf.dp)
-    hop = bw[src, dst]
-    t = np.zeros(conf.tp * conf.dp)
-    for x in range(conf.pp - 1):
-        t = t + 2.0 * prof.msg_pp / hop[x]
-    return float(max(0.0, t.max()))
+    return _t_pp_from_hops(conf, _pp_hop_bw(conf, mapping, bw), prof.msg_pp)
 
 
 def _t_pp_chain_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
@@ -118,6 +135,17 @@ def _t_dp_first_stage(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     return float(dp_allreduce_times(conf, mapping, bw, prof, spec)[0])
 
 
+def _combine_eq34(conf: Conf, prof: Profile, tp_scale: float, t_pp: float,
+                  t_dp: float) -> float:
+    """Eq. 3-4 scalar combination shared by every scorer of this model:
+    ``T = T_bubble * (n_mb / pp) + T_straggler + T_dp``."""
+    c = prof.c_fwd + prof.c_bwd
+    t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * tp_scale
+    t_bubble = conf.pp * (c + t_tp) + t_pp
+    t_straggler = (conf.pp - 1) * (c + t_tp)
+    return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
+
+
 def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                     prof: Profile, spec: ClusterSpec) -> float:
     """Eq. 3-4: T = T_bubble * (n_mb / pp) + T_straggler + T_dp.
@@ -133,14 +161,62 @@ def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
         Estimated seconds per training iteration.  Uses the vectorized
         group reductions; bit-identical to :func:`pipette_latency_ref`.
     """
-    c = prof.c_fwd + prof.c_bwd
-    t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * _tp_scale(conf, mapping, bw,
-                                                       spec, prof.tp_ref_bw)
+    scale = _tp_scale(conf, mapping, bw, spec, prof.tp_ref_bw)
     t_pp = _t_pp_chain(conf, mapping, bw, prof)
-    t_bubble = conf.pp * (c + t_tp) + t_pp
-    t_straggler = (conf.pp - 1) * (c + t_tp)
     t_dp = _t_dp_first_stage(conf, mapping, bw, prof, spec)
-    return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
+    return _combine_eq34(conf, prof, scale, t_pp, t_dp)
+
+
+def default_mapping_latencies(confs: Sequence[Conf],
+                              profiles: Sequence[Profile], bw: np.ndarray,
+                              spec: ClusterSpec) -> np.ndarray:
+    """Eq. 3-6 latency of every candidate's *default* (node-major) mapping
+    in one cached pass.
+
+    The mapping-dependent bandwidth reductions — the TP-group slowdown, the
+    inter-stage hop-bandwidth gather (:func:`_pp_hop_bw`), and the stage-0
+    DP all-reduce (whose ``msg_dp`` is a ``(pp, tp)``-only quantity) —
+    depend only on the ``(pp, tp, dp)`` shape under the default mapping, so
+    they are computed once per shape and reused across every microbatch
+    variant.  Only the Eq. 5 hop accumulation (whose ``msg_pp`` varies with
+    ``bs_micro``) and the Eq. 3-4 scalar combination (:func:`_combine_eq34`)
+    run per candidate.  Each output is bit-identical to
+    ``pipette_latency(conf, default_mapping(conf), ...)``.
+
+    Precondition (asserted): profiles within one ``(pp, tp, dp)`` shape
+    share ``tp_ref_bw`` and ``msg_dp`` — true of :func:`~repro.core.
+    simulator.build_profile` output for a single workload, where both are
+    ``(pp, tp)``-only quantities.
+
+    Args:
+        confs: candidate configurations.
+        profiles: ``profiles[i]`` is the :class:`Profile` of ``confs[i]``.
+        bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
+        spec: cluster description.
+
+    Returns:
+        ``(len(confs),)`` array of estimated seconds per iteration.
+    """
+    bw = np.asarray(bw)
+    out = np.empty(len(confs))
+    cache = {}
+    for i, (conf, prof) in enumerate(zip(confs, profiles)):
+        shape = (conf.pp, conf.tp, conf.dp)
+        entry = cache.get(shape)
+        if entry is None:
+            m = default_mapping(conf)
+            scale = _tp_scale(conf, m, bw, spec, prof.tp_ref_bw)
+            hop = _pp_hop_bw(conf, m, bw) if conf.pp > 1 else None
+            t_dp = float(dp_allreduce_times(conf, m, bw, prof, spec)[0])
+            entry = cache[shape] = (scale, hop, t_dp,
+                                    (prof.tp_ref_bw, prof.msg_dp))
+        scale, hop, t_dp, src_fields = entry
+        assert (prof.tp_ref_bw, prof.msg_dp) == src_fields, \
+            f"profiles vary within shape {shape}; per-shape cache invalid"
+        t_pp = 0.0 if conf.pp == 1 \
+            else _t_pp_from_hops(conf, hop, prof.msg_pp)
+        out[i] = _combine_eq34(conf, prof, scale, t_pp, t_dp)
+    return out
 
 
 def pipette_latency_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,

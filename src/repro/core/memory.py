@@ -15,11 +15,13 @@ import hashlib
 from dataclasses import dataclass
 from typing import Iterable, List, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from ..models.config import ModelConfig
 from . import flops as F
 from .cluster import ClusterSpec
+from .mlp import mlp_forward_jit, pad_batch_rows
 from .simulator import Conf, Workload
 
 
@@ -85,10 +87,28 @@ def analytical_estimate(w: Workload, conf: Conf) -> float:
 # ---------------------------------------------------------------------------
 
 def _features(cfg: ModelConfig, conf: Conf) -> np.ndarray:
-    v = [conf.n_gpus, cfg.n_layers, cfg.d_model, max(cfg.n_heads, 1),
-         conf.tp, conf.pp, conf.dp, conf.bs_micro, conf.bs_mini,
-         conf.bs_global]
-    return np.log(np.asarray(v, np.float64))
+    return _features_batch(cfg, [conf])[0]
+
+
+def _features_batch(cfg: ModelConfig, confs: Sequence[Conf]) -> np.ndarray:
+    """Feature matrix for many configurations in one shot.
+
+    The single source of the 10-field feature order; the scalar
+    :func:`_features` is its one-row special case (bit-for-bit — same
+    elementwise ``np.log`` over float64).
+
+    Args:
+        cfg: model configuration (shared by all rows).
+        confs: parallelism configurations.
+
+    Returns:
+        ``(len(confs), 10)`` float64 array.
+    """
+    v = np.asarray(
+        [[c.n_gpus, cfg.n_layers, cfg.d_model, max(cfg.n_heads, 1),
+          c.tp, c.pp, c.dp, c.bs_micro, c.bs_mini, c.bs_global]
+         for c in confs], np.float64)
+    return np.log(v)
 
 
 @dataclass
@@ -109,16 +129,40 @@ class MemoryEstimator:
     residual: bool = False
     workload_seq: int = 2048
 
-    def predict(self, cfg: ModelConfig, conf: Conf) -> float:
-        from .mlp import mlp_forward
-        import jax.numpy as jnp
-        x = (_features(cfg, conf) - self.x_mean) / self.x_std
-        y = float(mlp_forward(self.params, jnp.asarray(x[None], jnp.float32))[0, 0])
-        pred = float(np.exp(y * self.y_std + self.y_mean))
+    def predict_batch(self, cfg: ModelConfig,
+                      confs: Sequence[Conf]) -> np.ndarray:
+        """Predicted peak bytes/GPU for many configurations at once.
+
+        One jitted :func:`~repro.core.mlp.mlp_forward_jit` call on the whole
+        ``(N, F)`` feature matrix (zero-padded to a power-of-two row bucket so
+        varying candidate-set sizes reuse a handful of XLA traces).  Row ``i``
+        is bit-identical to ``predict(cfg, confs[i])`` — the scalar API is a
+        one-row special case of this path.
+
+        Args:
+            cfg: model configuration shared by every candidate.
+            confs: parallelism configurations to score.
+
+        Returns:
+            ``(len(confs),)`` float64 array of predicted peak bytes/GPU.
+        """
+        if not len(confs):
+            return np.zeros(0)
+        x = (_features_batch(cfg, confs) - self.x_mean) / self.x_std
+        xb = pad_batch_rows(x.astype(np.float32))
+        out = mlp_forward_jit(self.params, jnp.asarray(xb))
+        y = np.asarray(out[:len(confs), 0], np.float64)
+        pred = np.exp(y * self.y_std + self.y_mean)
         if self.residual:
-            w = Workload(cfg, self.workload_seq, conf.bs_global)
-            pred *= analytical_estimate(w, conf)
+            pred = pred * np.asarray(
+                [analytical_estimate(Workload(cfg, self.workload_seq,
+                                              c.bs_global), c)
+                 for c in confs])
         return pred
+
+    def predict(self, cfg: ModelConfig, conf: Conf) -> float:
+        """Scalar API, re-expressed over :meth:`predict_batch`."""
+        return float(self.predict_batch(cfg, [conf])[0])
 
     def fits(self, cfg: ModelConfig, conf: Conf, mem_limit: float) -> bool:
         return self.predict(cfg, conf) <= mem_limit * self.soft_margin

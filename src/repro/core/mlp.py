@@ -3,7 +3,7 @@ layers, 200 hidden units, trained on profiled configurations)."""
 from __future__ import annotations
 
 import functools
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,37 @@ def mlp_forward(params, x):
         if i + 1 < len(params):
             x = jax.nn.gelu(x)
     return x
+
+
+# Jitted forward shared by every estimator instance.  jax.jit caches one
+# trace per (param tree structure, batch shape); callers that pad batches to
+# power-of-two buckets therefore hit a handful of traces total, and repeated
+# ``configure()`` calls reuse them instead of re-tracing per candidate.
+mlp_forward_jit = jax.jit(mlp_forward)
+
+
+def pad_batch_rows(x: np.ndarray, minimum: int = 8) -> np.ndarray:
+    """Zero-pad ``x`` along axis 0 to the next power-of-two row count.
+
+    Bounds the number of distinct batch shapes :data:`mlp_forward_jit` ever
+    sees (log2 of the largest batch), so candidate-set sizes that vary from
+    call to call do not each pay an XLA retrace.  Row ``i`` of the padded
+    forward is bit-identical to row ``i`` of the unpadded one (row-wise
+    independence of the matmuls).
+
+    Args:
+        x: ``(n, f)`` feature matrix.
+        minimum: smallest bucket size.
+
+    Returns:
+        ``(m, f)`` array with ``m = max(minimum, 2**ceil(log2(n)))``.
+    """
+    n = x.shape[0]
+    m = max(minimum, 1 << (n - 1).bit_length())
+    if m == n:
+        return x
+    return np.concatenate(
+        [x, np.zeros((m - n,) + x.shape[1:], x.dtype)], axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "lr"))

@@ -1,15 +1,29 @@
-"""Algorithm 1 — the Pipette configurator.
+"""Algorithm 1 — the Pipette configurator, as a staged array pipeline.
 
-Enumerates (pp, tp, dp) with pp*tp*dp = G and every microbatch divisor,
-prunes configurations the memory estimator rejects, runs SA worker
-dedication on each survivor scored by the latency estimator, and returns
-the best (Conf, Map, T) plus a ranked list (for the Fig. 5b style top-k
-analyses).
+``configure()`` runs five batched stages instead of a per-candidate loop:
+
+1. **enumerate** — all (pp, tp, dp, bs_micro) with ``pp*tp*dp = G``, plus
+   the microbatch filters, collected up front;
+2. **memory-prune** — one jitted
+   :meth:`~repro.core.memory.MemoryEstimator.predict_batch` call on the
+   whole ``(N, F)`` feature matrix, pruned as a vector (the seed code
+   re-entered JAX once per candidate with an un-jitted one-row forward, so
+   search overhead was dominated by dispatch);
+3. **profile** — :class:`~repro.core.simulator.ProfileCache` builds each
+   surviving ``(pp, tp, bs_micro)`` profile once (a ``Profile`` does not
+   depend on ``dp``, and its ``(pp, tp)``-only fields are shared across
+   microbatch variants); pruned configs never pay profile construction;
+4. **pre-score** — every survivor's default mapping is scored in one cached
+   pass (:func:`~repro.core.latency.default_mapping_latencies`);
+5. **dedicate** — SA worker dedication on every survivor, or, with
+   ``sa_topk=k``, only on the ``k`` most promising by pre-score so the SA
+   budget concentrates where it matters; the rest keep their default
+   mapping and pre-scored latency.
 
 The SA stage uses the incremental :class:`~repro.core.dedication.
 DedicationEngine`; its permutation-position index tensors depend only on the
 (pp, tp, dp) shape, so they are built once per shape and shared across every
-microbatch variant of that shape (``enumerate_confs`` yields many)."""
+microbatch variant of that shape."""
 from __future__ import annotations
 
 import time
@@ -19,11 +33,11 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .cluster import ClusterSpec
-from .dedication import (DedicationEngine, GroupIndex, SAResult, anneal,
+from .dedication import (DedicationEngine, GroupIndex, anneal,
                          anneal_multistart)
-from .latency import pipette_latency
+from .latency import default_mapping_latencies
 from .memory import MemoryEstimator, enumerate_confs
-from .simulator import Conf, Profile, Workload, build_profile, default_mapping
+from .simulator import Conf, ProfileCache, Workload, default_mapping
 
 
 @dataclass
@@ -50,7 +64,8 @@ class SearchResult:
         best: lowest-latency candidate (``None`` if nothing survived).
         ranked: all candidates, fastest first.
         overhead: timing breakdown — ``total_s``, ``sa_s``,
-            ``mem_estimator_s``, ``n_candidates``.
+            ``mem_estimator_s``, ``enumerate_s``, ``profile_s``,
+            ``prescore_s``, ``n_enumerated``, ``n_candidates``.
 
     Example:
         >>> res = configure(w, spec, bw, sa_seconds=0.2)
@@ -72,7 +87,7 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
               estimator: Optional[MemoryEstimator] = None,
               mem_limit: Optional[float] = None,
               sa_seconds: float = 1.0, sa_iters: int = 8_000,
-              n_chains: int = 1,
+              n_chains: int = 1, sa_topk: Optional[int] = None,
               max_micro: int = 16, fixed_micro: Optional[int] = None,
               seed: int = 0,
               dedicate: bool = True) -> SearchResult:
@@ -84,12 +99,17 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
         bw: ``(G, G)`` profiled bandwidth matrix from
             :func:`~repro.core.cluster.profile_bandwidth`.
         estimator: optional MLP memory estimator; prunes configs predicted
-            to exceed ``mem_limit * soft_margin``.
+            to exceed ``mem_limit * soft_margin`` (one batched forward for
+            the whole enumeration).
         mem_limit: per-GPU memory budget in bytes (default ``spec.gpu_mem``).
         sa_seconds / sa_iters: total SA budget per candidate (split across
             chains when ``n_chains > 1``).
         n_chains: independent SA restarts per candidate, best-of
             (see :func:`~repro.core.dedication.anneal_multistart`).
+        sa_topk: anneal only the ``k`` candidates with the best
+            default-mapping latency; the rest keep the default mapping.
+            ``None`` (default) anneals every survivor — the pre-knob
+            exhaustive behaviour.
         max_micro: skip configurations with ``bs_micro`` above this.
         fixed_micro: restrict to one microbatch size (ablations).
         seed: RNG seed; the whole search is deterministic given it.
@@ -101,27 +121,53 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
     """
     t0 = time.perf_counter()
     mem_limit = mem_limit if mem_limit is not None else spec.gpu_mem
-    g = spec.n_gpus
-    cands: List[Candidate] = []
-    mem_time = 0.0
-    sa_time = 0.0
-    index_cache: Dict[Tuple[int, int, int], GroupIndex] = {}
 
-    for conf in enumerate_confs(g, w.bs_global, n_layers=w.cfg.n_layers):
-        if conf.bs_micro > max_micro:
-            continue
-        if fixed_micro is not None and conf.bs_micro != fixed_micro:
-            continue
-        prof = build_profile(w, spec, conf)
-        tm = time.perf_counter()
-        if estimator is not None:
-            pred = estimator.predict(w.cfg, conf)
-            mem_time += time.perf_counter() - tm
-            if pred > mem_limit * estimator.soft_margin:
-                continue
+    # stage 1: enumerate the whole search space up front
+    confs = [conf for conf in enumerate_confs(spec.n_gpus, w.bs_global,
+                                              n_layers=w.cfg.n_layers)
+             if conf.bs_micro <= max_micro
+             and (fixed_micro is None or conf.bs_micro == fixed_micro)]
+    enum_s = time.perf_counter() - t0
+
+    # stage 2: batched memory pruning — one jitted forward for all confs
+    tm = time.perf_counter()
+    if estimator is not None and confs:
+        preds = estimator.predict_batch(w.cfg, confs)
+        keep = preds <= mem_limit * estimator.soft_margin
+        survivors = [c for c, k in zip(confs, keep) if k]
+        mem_preds = preds[keep]
+    else:
+        survivors = confs
+        mem_preds = np.full(len(confs), float("nan"))
+    mem_time = time.perf_counter() - tm
+
+    # stage 3: profiles only for survivors, memoized per (pp, tp, bs_micro)
+    tp0 = time.perf_counter()
+    prof_cache = ProfileCache(w, spec)
+    profiles = [prof_cache.get(c) for c in survivors]
+    profile_s = time.perf_counter() - tp0
+
+    # stage 4: one cached pass over every survivor's default mapping
+    ts0 = time.perf_counter()
+    base_lat = default_mapping_latencies(survivors, profiles, bw, spec)
+    prescore_s = time.perf_counter() - ts0
+
+    # stage 5: SA dedication — exhaustive, or concentrated on the top-k
+    sa_time = 0.0
+    cands: List[Candidate] = []
+    if dedicate and survivors:
+        if sa_topk is None or sa_topk >= len(survivors):
+            sa_set = set(range(len(survivors)))
         else:
-            pred = float("nan")
-        if dedicate:
+            order = np.argsort(base_lat, kind="stable")
+            sa_set = set(int(i) for i in order[:max(sa_topk, 0)])
+        index_cache: Dict[Tuple[int, int, int], GroupIndex] = {}
+        for i, (conf, prof) in enumerate(zip(survivors, profiles)):
+            if i not in sa_set:
+                cands.append(Candidate(conf, default_mapping(conf),
+                                       float(base_lat[i]),
+                                       float(mem_preds[i])))
+                continue
             shape = (conf.pp, conf.tp, conf.dp)
             idx = index_cache.get(shape)
             if idx is None:
@@ -138,11 +184,12 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
                 res = anneal(conf, bw, prof, spec, time_limit_s=sa_seconds,
                              max_iters=sa_iters, seed=seed, engine=engine)
             sa_time += time.perf_counter() - ts
-            cands.append(Candidate(conf, res.mapping, res.latency, pred))
-        else:
-            m = default_mapping(conf)
-            lat = pipette_latency(conf, m, bw, prof, spec)
-            cands.append(Candidate(conf, m, lat, pred))
+            cands.append(Candidate(conf, res.mapping, res.latency,
+                                   float(mem_preds[i])))
+    else:
+        for i, conf in enumerate(survivors):
+            cands.append(Candidate(conf, default_mapping(conf),
+                                   float(base_lat[i]), float(mem_preds[i])))
 
     cands.sort(key=lambda c: c.latency)
     return SearchResult(
@@ -150,4 +197,7 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
         ranked=cands,
         overhead={"total_s": time.perf_counter() - t0,
                   "sa_s": sa_time, "mem_estimator_s": mem_time,
+                  "enumerate_s": enum_s, "profile_s": profile_s,
+                  "prescore_s": prescore_s,
+                  "n_enumerated": len(confs),
                   "n_candidates": len(cands)})

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -95,23 +95,32 @@ class Profile:
     tp_ref_bw: float = 300e9       # bandwidth T_tp was profiled at
 
 
-def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
-    """Derive the profiled per-microbatch quantities for one configuration.
+def _profile_static(w: Workload, spec: ClusterSpec,
+                    conf: Conf) -> Tuple[float, float, float]:
+    """The :class:`Profile` fields that depend only on ``(pp, tp)``.
 
-    Stands in for the paper's on-cluster profiling stage: per-microbatch
-    fwd/bwd compute (with the GEMM batch-efficiency penalty for tiny
-    microbatches), per-microbatch TP all-reduce time at the nominal group
-    bandwidth, and the inter-stage / data-parallel message sizes.
-
-    Args:
-        w: workload (model config, sequence length, global batch).
-        spec: cluster description.
-        conf: parallelism configuration being profiled.
+    ``stage_params``, ``msg_dp`` and ``tp_ref_bw`` are independent of
+    ``bs_micro`` (and of ``dp``), so :class:`ProfileCache` shares them across
+    every microbatch variant of a parallelism shape.
 
     Returns:
-        :class:`Profile` consumed by the latency estimators and simulator.
+        ``(stage_params, msg_dp, tp_ref_bw)``.
     """
     cfg = w.cfg
+    tp_ref_bw = spec.intra_bw if conf.tp <= spec.gpus_per_node \
+        else spec.inter_bw
+    p_total = F.param_count(cfg)
+    stage_params = (p_total - 2 * cfg.vocab_size * cfg.d_model) / conf.pp \
+        + 2 * cfg.vocab_size * cfg.d_model / min(conf.pp, 2)
+    msg_dp = stage_params / conf.tp * w.grad_bytes
+    return stage_params, msg_dp, tp_ref_bw
+
+
+def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
+                     static: Tuple[float, float, float]) -> Profile:
+    """The ``bs_micro``-dependent remainder of :func:`build_profile`."""
+    cfg = w.cfg
+    stage_params, msg_dp, tp_ref_bw = static
     layers_stage = -(-cfg.n_layers // conf.pp)
     tokens_mb = conf.bs_micro * w.seq
     n_active = F.active_param_count(cfg)
@@ -134,17 +143,69 @@ def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
     # cannot fit inside a node, its ring bottlenecks on the (nominal)
     # inter-node link — visible to every configurator.
     msg_tp = conf.bs_micro * w.seq * cfg.d_model * 2
-    tp_ref_bw = spec.intra_bw if conf.tp <= spec.gpus_per_node \
-        else spec.inter_bw
     t_ar = ring_allreduce_time(msg_tp, tp_ref_bw, conf.tp)
     t_tp = 2 * layers_stage * t_ar
     msg_pp = conf.bs_micro * w.seq * cfg.d_model * 2.0
-    p_total = F.param_count(cfg)
-    stage_params = (p_total - 2 * cfg.vocab_size * cfg.d_model) / conf.pp \
-        + 2 * cfg.vocab_size * cfg.d_model / min(conf.pp, 2)
-    msg_dp = stage_params / conf.tp * w.grad_bytes
     return Profile(c_fwd, c_bwd, t_tp, 2 * t_tp, msg_pp, msg_dp,
                    stage_params, tp_ref_bw)
+
+
+def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
+    """Derive the profiled per-microbatch quantities for one configuration.
+
+    Stands in for the paper's on-cluster profiling stage: per-microbatch
+    fwd/bwd compute (with the GEMM batch-efficiency penalty for tiny
+    microbatches), per-microbatch TP all-reduce time at the nominal group
+    bandwidth, and the inter-stage / data-parallel message sizes.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description.
+        conf: parallelism configuration being profiled.
+
+    Returns:
+        :class:`Profile` consumed by the latency estimators and simulator.
+    """
+    return _profile_dynamic(w, spec, conf, _profile_static(w, spec, conf))
+
+
+class ProfileCache:
+    """Memoized :func:`build_profile` for one ``(workload, spec)`` pair.
+
+    A :class:`Profile` is fully determined by ``(pp, tp, bs_micro)`` — it
+    does not depend on ``dp`` — so the configurator's enumeration (which
+    yields many ``dp``/microbatch variants per shape) hits the cache heavily.
+    The ``(pp, tp)``-only fields (:func:`_profile_static`) are additionally
+    shared across microbatch variants; the ``bs_micro``-dependent remainder
+    is built lazily on first use.  Returned profiles are bit-identical to
+    :func:`build_profile`.
+
+    Example:
+        >>> cache = ProfileCache(w, spec)
+        >>> cache.get(conf) == build_profile(w, spec, conf)
+        True
+    """
+
+    def __init__(self, w: Workload, spec: ClusterSpec):
+        self.w = w
+        self.spec = spec
+        self._static: Dict[Tuple[int, int], Tuple[float, float, float]] = {}
+        self._full: Dict[Tuple[int, int, int], Profile] = {}
+
+    def get(self, conf: Conf) -> Profile:
+        """The :class:`Profile` for ``conf``, computed at most once per
+        ``(pp, tp, bs_micro)``."""
+        key = (conf.pp, conf.tp, conf.bs_micro)
+        prof = self._full.get(key)
+        if prof is None:
+            skey = key[:2]
+            static = self._static.get(skey)
+            if static is None:
+                static = self._static[skey] = \
+                    _profile_static(self.w, self.spec, conf)
+            prof = self._full[key] = \
+                _profile_dynamic(self.w, self.spec, conf, static)
+        return prof
 
 
 # ---------------------------------------------------------------------------

@@ -3,10 +3,12 @@ simulated clusters — the paper's headline claims at test scale."""
 import numpy as np
 import pytest
 
-from repro.core import (MID_RANGE, Conf, Workload, amp_configure,
-                        amp_latency, build_profile, configure,
-                        default_mapping, ground_truth_memory, measure,
-                        mlm_configure, pipette_latency, profile_bandwidth,
+from repro.core import (MID_RANGE, Conf, DedicationEngine, GroupIndex,
+                        Workload, amp_configure, amp_latency, anneal,
+                        build_profile, configure, default_mapping,
+                        enumerate_confs, fit_memory_estimator,
+                        ground_truth_memory, measure, mlm_configure,
+                        pipette_latency, profile_bandwidth,
                         true_bandwidth_matrix, varuna_configure)
 from repro.models.config import ModelConfig
 
@@ -74,6 +76,75 @@ def test_mlm_heuristic_memory_safe(bw):
     assert res.best is not None
     assert res.best.conf.tp == SPEC.gpus_per_node
     assert ground_truth_memory(W, res.best.conf, SPEC) <= SPEC.gpu_mem
+
+
+def test_predict_batch_matches_scalar_bitwise():
+    """The batched jitted forward must reproduce the scalar ``predict`` API
+    to float32 bit-equality on a large random config sample."""
+    est = fit_memory_estimator([W], SPEC, fit_nodes=1, steps=1500,
+                               residual=True)
+    pool = [c for g in (8, 16, 24, 32, 48, 64) for bsg in (64, 128, 256)
+            for c in enumerate_confs(g, bsg, n_layers=GPT.n_layers)
+            if c.bs_micro <= 16]
+    rng = np.random.default_rng(0)
+    confs = [pool[i] for i in rng.choice(len(pool), size=240, replace=False)]
+    with np.errstate(over="ignore"):       # extrapolation may saturate exp
+        batch = est.predict_batch(W.cfg, confs)
+        scalar = np.array([est.predict(W.cfg, c) for c in confs])
+    assert batch.shape == (240,)
+    assert batch.astype(np.float32).tobytes() == \
+        scalar.astype(np.float32).tobytes()
+
+
+def test_sa_topk_matches_exhaustive_best(bw):
+    """Concentrating the SA budget on the top-k pre-scored candidates must
+    find the same best as annealing every survivor (small cluster,
+    iteration-bound so the SA trajectories are deterministic)."""
+    _, bw_meas = bw
+    kw = dict(sa_seconds=60.0, sa_iters=250, max_micro=4, seed=3)
+    full = configure(W, SPEC, bw_meas, **kw)
+    topk = configure(W, SPEC, bw_meas, sa_topk=8, **kw)
+    assert topk.best.conf == full.best.conf
+    assert topk.best.latency == full.best.latency
+    # the knob prunes SA work, not candidates: the ranking stays complete
+    assert topk.overhead["n_candidates"] == full.overhead["n_candidates"]
+
+
+def test_ranked_order_matches_prerefactor_reference(bw):
+    """The staged pipeline must rank exactly like the pre-refactor
+    per-candidate loop (same confs, bit-equal latencies) for a fixed seed,
+    with and without SA dedication."""
+    _, bw_meas = bw
+    kw = dict(max_micro=4, seed=5)
+    res_sa = configure(W, SPEC, bw_meas, sa_seconds=60.0, sa_iters=120, **kw)
+    res_plain = configure(W, SPEC, bw_meas, dedicate=False, **kw)
+
+    cands_sa, cands_plain = [], []
+    index_cache = {}
+    for conf in enumerate_confs(SPEC.n_gpus, W.bs_global,
+                                n_layers=GPT.n_layers):
+        if conf.bs_micro > 4:
+            continue
+        prof = build_profile(W, SPEC, conf)
+        m = default_mapping(conf)
+        cands_plain.append((conf, pipette_latency(conf, m, bw_meas, prof,
+                                                  SPEC)))
+        shape = (conf.pp, conf.tp, conf.dp)
+        idx = index_cache.get(shape)
+        if idx is None:
+            idx = index_cache[shape] = GroupIndex.build(conf)
+        engine = DedicationEngine(conf, bw_meas, prof, SPEC, index=idx)
+        r = anneal(conf, bw_meas, prof, SPEC, time_limit_s=60.0,
+                   max_iters=120, seed=5, engine=engine)
+        cands_sa.append((conf, r.latency))
+    cands_sa.sort(key=lambda t: t[1])
+    cands_plain.sort(key=lambda t: t[1])
+
+    assert [c.conf for c in res_sa.ranked] == [c for c, _ in cands_sa]
+    assert [c.latency for c in res_sa.ranked] == [t for _, t in cands_sa]
+    assert [c.conf for c in res_plain.ranked] == [c for c, _ in cands_plain]
+    assert [c.latency for c in res_plain.ranked] == \
+        [t for _, t in cands_plain]
 
 
 def test_configure_with_memory_estimator_prunes(bw):

@@ -1,15 +1,30 @@
 """Sharding-policy invariants: every parameter spec the policy emits must
 divide the tensor on both production meshes, for every assigned arch —
 this is the property the 80-cell dry-run depends on."""
+import os
 from types import SimpleNamespace
 
-import jax
-import pytest
-from jax.sharding import PartitionSpec as P
+# Shape-only checks (jax.eval_shape), but force a multi-device host platform
+# anyway so the file also runs on single-device CPU runners the way
+# test_multidevice does for its subprocesses.  Must precede jax's backend
+# init, hence before the import below.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from repro import configs
-from repro.models import model as M
-from repro.models.sharding import ShardCtx, tree_pspecs
+import jax                                     # noqa: E402
+import pytest                                  # noqa: E402
+from jax.sharding import PartitionSpec as P    # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.models import model as M            # noqa: E402
+from repro.models.sharding import ShardCtx, tree_pspecs   # noqa: E402
+
+
+def _flatten_with_path(tree):
+    """``jax.tree.flatten_with_path`` where available (jax >= 0.5), else the
+    ``jax.tree_util`` spelling (jax 0.4.x)."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
 
 MESHES = {
     "16x16": {"data": 16, "model": 16},
@@ -43,7 +58,7 @@ def test_param_specs_divide(arch, mesh_name):
                 n *= MESHES[mesh_name][a]
             assert dim % n == 0, (arch, mesh_name, path, dim, ax)
 
-    flat_s, _ = jax.tree.flatten_with_path(sds)
+    flat_s, _ = _flatten_with_path(sds)
     flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(flat_s) == len(flat_p)
     for (path, leaf), spec in zip(flat_s, flat_p):
