@@ -2,17 +2,23 @@
 vs the seed's per-candidate scalar path, plus the end-to-end ``configure()``
 phase breakdown.
 
-    PYTHONPATH=src python -m benchmarks.bench_configure [--nodes 16] [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_configure \
+        [--nodes 16] [--quick] [--max-cp 4]
 
 Phase A times memory pruning of the whole enumeration (MID_RANGE @ 16
 nodes): the seed path paid one un-jitted one-row JAX forward per candidate
 (dispatch-dominated), the new path one jitted ``predict_batch`` call on the
 (N, F) feature matrix.  It also times profile construction the seed way
 (every enumerated conf, before the memory check) vs the new way (survivors
-only, memoized per ``(pp, tp, bs_micro)``).
+only, memoized per ``(pp, tp, cp, bs_micro)``).
 
 Phase B runs the full ``configure()`` search and prints the overhead
 breakdown, exhaustive vs ``sa_topk``.
+
+``--max-cp N`` (4D mode) opens the context-parallel axis: the enumeration
+grows by the cp divisors of the sequence length, and the same batched
+pipeline absorbs the larger candidate set — the point of ISSUE 3.  The
+benchmark prints the 3D vs 4D candidate counts alongside the timings.
 
 Acceptance target (ISSUE 2): >= 5x on the enumerate+prune phase.
 """
@@ -38,7 +44,7 @@ def scalar_predict_seed(est, cfg, conf) -> float:
     """The seed-era ``MemoryEstimator.predict``: per-call feature build and
     an un-jitted one-row MLP forward (one JAX dispatch per candidate)."""
     import jax.numpy as jnp
-    x = (_features(cfg, conf) - est.x_mean) / est.x_std
+    x = (_features(cfg, conf, with_cp=est.with_cp) - est.x_mean) / est.x_std
     y = float(mlp_forward(est.params,
                           jnp.asarray(x[None], jnp.float32))[0, 0])
     pred = float(np.exp(y * est.y_std + est.y_mean))
@@ -48,7 +54,8 @@ def scalar_predict_seed(est, cfg, conf) -> float:
     return pred
 
 
-def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3):
+def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3,
+                max_cp: int = 1):
     """Enumerate+prune wall-clock, seed scalar path vs batched path.
 
     Yields ``(name, seconds, n_in, n_out)`` rows; the batched row is
@@ -58,7 +65,8 @@ def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3):
 
     def enumerate_filtered():
         return [c for c in enumerate_confs(spec.n_gpus, w.bs_global,
-                                           n_layers=w.cfg.n_layers)
+                                           n_layers=w.cfg.n_layers,
+                                           max_cp=max_cp, seq=w.seq)
                 if c.bs_micro <= max_micro]
 
     # seed path: one JAX dispatch per enumerated candidate
@@ -105,11 +113,11 @@ def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3):
 
 
 def bench_search(w, spec, est, bw, *, sa_iters: int, max_micro: int,
-                 sa_topk: int):
+                 sa_topk: int, max_cp: int = 1):
     """Full ``configure()`` wall-clock and phase breakdown, exhaustive SA vs
     the ``sa_topk`` concentration knob.  Yields ``(name, res)`` pairs."""
     kw = dict(estimator=est, sa_seconds=60.0, sa_iters=sa_iters,
-              max_micro=max_micro, seed=0)
+              max_micro=max_micro, max_cp=max_cp, seed=0)
     yield ("configure() exhaustive SA", configure(w, spec, bw, **kw))
     yield (f"configure() sa_topk={sa_topk}",
            configure(w, spec, bw, sa_topk=sa_topk, **kw))
@@ -121,6 +129,9 @@ def main() -> None:
                     help="cluster size in 8-GPU nodes (default 16)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: small estimator, tiny SA budget")
+    ap.add_argument("--max-cp", type=int, default=1,
+                    help="open the 4D context-parallel axis up to this "
+                         "degree (default 1 = the 3D space)")
     args = ap.parse_args()
 
     spec = MID_RANGE.with_nodes(args.nodes)
@@ -128,13 +139,22 @@ def main() -> None:
     steps = 1000 if args.quick else 4000
     t0 = time.perf_counter()
     est = fit_memory_estimator([w], spec, fit_nodes=2, steps=steps,
-                               residual=True)
-    print(f"# estimator fit ({steps} steps): "
+                               residual=True, max_cp=args.max_cp)
+    print(f"# estimator fit ({steps} steps, max_cp={args.max_cp}): "
           f"{time.perf_counter() - t0:.1f}s")
+    if args.max_cp > 1:
+        n3 = len(enumerate_confs(spec.n_gpus, w.bs_global,
+                                 n_layers=w.cfg.n_layers))
+        n4 = len(enumerate_confs(spec.n_gpus, w.bs_global,
+                                 n_layers=w.cfg.n_layers,
+                                 max_cp=args.max_cp, seq=w.seq))
+        print(f"# 4D mode: search space {n3} (3D) -> {n4} confs "
+              f"({n4 / max(n3, 1):.1f}x)")
 
     print("benchmark,wall_s,n_in,n_out")
     rows = {}
-    for name, sec, n_in, n_out in bench_prune(w, spec, est):
+    for name, sec, n_in, n_out in bench_prune(w, spec, est,
+                                              max_cp=args.max_cp):
         rows[name] = sec
         print(f"{name},{sec:.4f},{n_in},{n_out}")
     speedup = rows["prune scalar-predict (seed)"] / rows["prune batched (new)"]
@@ -150,7 +170,8 @@ def main() -> None:
     sa_iters = 30 if args.quick else 150
     max_micro = 2 if args.quick else 4
     for name, res in bench_search(w, spec, est, bw, sa_iters=sa_iters,
-                                  max_micro=max_micro, sa_topk=8):
+                                  max_micro=max_micro, sa_topk=8,
+                                  max_cp=args.max_cp):
         o = res.overhead
         print(f"{name},{o['total_s']:.2f},{o['sa_s']:.2f},"
               f"{o['mem_estimator_s']:.4f},{o['profile_s']:.4f},"

@@ -1,8 +1,13 @@
-"""Pipette core: the paper's automatic fine-grained 3D-parallel training
+"""Pipette core: the paper's automatic fine-grained parallel-training
 configurator — latency estimator (Eq. 3-6), MLP memory estimator (§VI),
 SA worker dedication (§IV), Algorithm 1 search, the discrete-event cluster
 simulator used as the real-cluster stand-in, and the AMP/Varuna/Megatron
-baselines."""
+baselines.
+
+The search space is 4D: (pp, tp, cp, dp) with context parallelism (ring
+attention over sequence shards) as the fourth axis via
+``configure(max_cp=...)``; ``cp == 1`` reproduces the paper's 3D setting
+bit-for-bit, and the baselines deliberately stay 3D."""
 
 from .cluster import (ClusterSpec, HIGH_END, MID_RANGE, TPU_POD,
                       min_group_bw, min_group_bw_batch, profile_bandwidth,

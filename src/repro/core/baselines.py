@@ -1,9 +1,14 @@
 """Baseline configurators: AMP [8], Varuna [12], and the Megatron-LM
-manual heuristic [14] — as characterised in the paper's evaluation."""
+manual heuristic [14] — as characterised in the paper's evaluation.
+
+All three deliberately search the 3D (pp, tp, dp) space only: none of the
+prior art models context parallelism, which is exactly the comparison point
+for Pipette's 4D search (``configure(max_cp > 1)``) on long-context
+workloads.  They do share the schedule-validity gate (``n_mb >= pp``) —
+a config 1F1B cannot fill would be rejected on any real cluster."""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
@@ -11,7 +16,7 @@ from .cluster import ClusterSpec
 from .latency import amp_latency, varuna_latency
 from .memory import enumerate_confs, ground_truth_memory
 from .search import Candidate, SearchResult
-from .simulator import Conf, Workload, build_profile, default_mapping, measure
+from .simulator import Workload, build_profile, default_mapping, measure
 
 
 def amp_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> SearchResult:

@@ -148,16 +148,32 @@ def ring_allreduce_time(msg_bytes: float, group_bw: float, n: int,
 
     Args:
         msg_bytes: bytes contributed by each rank.
-        group_bw: bottleneck link bandwidth of the ring, bytes/s.
-        n: ring size (0 seconds when ``n <= 1``).
+        group_bw: bottleneck link bandwidth of the ring, bytes/s.  Must be
+            finite and positive for real rings (``n > 1``): the ``inf``
+            that :func:`min_group_bw` returns for singleton groups would
+            otherwise silently price a 0-second collective for a ring that
+            supposedly spans multiple GPUs.
+        n: ring size.  ``n == 1`` (and 0) is an explicit early-out: a
+            single rank performs no communication, so the result is exactly
+            0.0 *before* ``group_bw`` is touched — pairing this with a
+            singleton :func:`min_group_bw` (``inf``) is therefore safe.
         phases: 2 for reduce-scatter + all-gather over one message pass,
             4 for the hierarchical intra-node stage.
 
     Returns:
         Seconds for the collective.
+
+    Raises:
+        ValueError: ``n > 1`` with a non-finite or non-positive
+            ``group_bw`` (a singleton-group bandwidth leaking into a real
+            ring).
     """
     if n <= 1:
         return 0.0
+    if not np.isfinite(group_bw) or group_bw <= 0:
+        raise ValueError(
+            f"ring of {n} ranks needs a finite positive bottleneck "
+            f"bandwidth, got {group_bw!r} (singleton-group inf leaking in?)")
     return phases * (n - 1) / n * msg_bytes / group_bw
 
 
@@ -170,7 +186,13 @@ def min_group_bw(bw: np.ndarray, gpus) -> float:
 
     Returns:
         Minimum off-diagonal entry of the group's bandwidth submatrix
-        (both directions considered); ``inf`` for groups of size <= 1.
+        (both directions considered); ``inf`` for groups of size <= 1 — a
+        singleton has no links, and ``inf`` makes downstream guards
+        explicit.  Callers must special-case that ``inf``: the latency
+        scalers (``_tp_scale``/``_cp_scale``) treat non-finite group
+        bandwidth as scale 1.0, and :func:`ring_allreduce_time` never sees
+        it because its ``n <= 1`` early-out fires first (it raises if a
+        non-finite bandwidth reaches a real ring).
     """
     gpus = list(gpus)
     if len(gpus) <= 1:

@@ -10,7 +10,8 @@ iteration cap so tests stay fast.
 The hot loop is driven by :class:`DedicationEngine`, an incremental
 vectorized scorer: the three SA moves touch a known set of permutation
 positions, and only the TP groups / pipeline chains / first-stage DP groups
-containing those positions are re-gathered and re-reduced — everything else
+(and, for 4D configurations, the context-parallel ring groups) containing
+those positions are re-gathered and re-reduced — everything else
 comes from per-group caches.  Scores are bit-identical to the full
 :func:`repro.core.latency.pipette_latency` (and its pure-Python reference).
 :func:`anneal_multistart` adds best-of-``n_chains`` restarts on top.
@@ -30,21 +31,27 @@ from .simulator import Conf, Profile
 
 
 def perm_to_mapping(perm: np.ndarray, conf: Conf) -> np.ndarray:
-    """Flat permutation -> (pp, tp, dp) worker mapping.
+    """Flat permutation -> (pp, tp[, cp], dp) worker mapping.
 
-    Flattening keeps tp fastest so contiguous GPUs (same node) serve one
-    tensor-parallel group in the identity permutation.
+    Flattening keeps tp fastest (then cp, then dp, then pp) so contiguous
+    GPUs (same node) serve one tensor-parallel group in the identity
+    permutation.
 
     Args:
         perm: ``(n_gpus,)`` permutation of GPU ids; position ``p`` holds the
-            GPU serving logical worker ``(x, y, z)`` with
-            ``p = x*dp*tp + z*tp + y``.
+            GPU serving logical worker ``(x, y, k, z)`` with
+            ``p = x*dp*cp*tp + z*cp*tp + k*tp + y`` (``k = 0`` collapses to
+            the historical 3D layout when ``cp == 1``).
         conf: parallelism configuration.
 
     Returns:
-        ``(pp, tp, dp)`` integer mapping array.
+        ``(pp, tp, dp)`` integer mapping array when ``cp == 1`` (the
+        historical shape), else ``(pp, tp, cp, dp)``.
     """
-    return perm.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
+    if conf.cp == 1:
+        return perm.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
+    return perm.reshape(conf.pp, conf.dp, conf.cp,
+                        conf.tp).transpose(0, 3, 2, 1)
 
 
 @dataclass
@@ -128,20 +135,26 @@ def _move(perm: np.ndarray, rng: np.random.Generator) -> np.ndarray:
 
 @dataclass(frozen=True)
 class GroupIndex:
-    """Precomputed permutation-position tensors for a (pp, tp, dp) shape.
-
-    Positions follow the :func:`perm_to_mapping` layout
-    ``p = x*dp*tp + z*tp + y``; the tensors depend only on the shape, never
-    on the permutation or bandwidth, so :func:`repro.core.search.configure`
-    shares one instance across every microbatch variant of a parallelism
+    """Precomputed permutation-position tensors for a (pp, tp, cp, dp)
     shape.
 
+    Positions follow the :func:`perm_to_mapping` layout
+    ``p = x*dp*cp*tp + z*cp*tp + k*tp + y``; the tensors depend only on the
+    shape, never on the permutation or bandwidth, so
+    :func:`repro.core.search.configure` shares one instance across every
+    microbatch variant of a parallelism shape.
+
     Attributes:
-        pos_tp: ``(pp*dp, tp)`` positions of each tensor-parallel group.
-        pos_pp_src / pos_pp_dst: ``(pp-1, tp*dp)`` positions of the sender /
-            receiver of every inter-stage hop, one column per chain.
-        pos_dp0: ``(tp, dp)`` positions of the stage-0 data-parallel groups
-            (the only DP groups on the Eq. 6 critical path).
+        pos_tp: ``(pp*cp*dp, tp)`` positions of each tensor-parallel group.
+        pos_pp_src / pos_pp_dst: ``(pp-1, tp*cp*dp)`` positions of the
+            sender / receiver of every inter-stage hop, one column per
+            chain.
+        pos_dp0: ``(tp*cp, dp)`` positions of the stage-0 data-parallel
+            groups (the only DP groups on the Eq. 6 critical path).
+        pos_cp: ``(pp*tp*dp, cp)`` positions of each context-parallel (ring
+            KV-exchange) group; ``None`` when ``cp == 1``.
+        cp_group_of: ``(n_gpus,)`` position -> cp-group-row lookup used by
+            the incremental move re-scorer; ``None`` when ``cp == 1``.
     """
     pp: int
     tp: int
@@ -150,19 +163,39 @@ class GroupIndex:
     pos_pp_src: np.ndarray
     pos_pp_dst: np.ndarray
     pos_dp0: np.ndarray
+    cp: int = 1
+    pos_cp: Optional[np.ndarray] = None
+    cp_group_of: Optional[np.ndarray] = None
 
     @staticmethod
     def build(conf: Conf) -> "GroupIndex":
-        """Construct the index tensors for ``conf``'s (pp, tp, dp) shape."""
-        pp, tp, dp = conf.pp, conf.tp, conf.dp
-        base = (np.arange(pp)[:, None] * dp + np.arange(dp)[None, :]) * tp
+        """Construct the index tensors for ``conf``'s (pp, tp, cp, dp)
+        shape."""
+        pp, tp, cp, dp = conf.pp, conf.tp, conf.cp, conf.dp
+        nc = tp * cp * dp                      # positions per stage
+        base = (np.arange(pp)[:, None] * (dp * cp) +
+                np.arange(dp * cp)[None, :]) * tp
         pos_tp = base.reshape(-1, 1) + np.arange(tp)[None, :]
-        chains = np.arange(tp * dp)
-        stages = np.arange(max(pp - 1, 1))[:, None] * (dp * tp)
+        chains = np.arange(nc)
+        stages = np.arange(max(pp - 1, 1))[:, None] * nc
         pos_pp_src = stages + chains[None, :]
-        pos_pp_dst = pos_pp_src + dp * tp
-        pos_dp0 = np.arange(dp)[None, :] * tp + np.arange(tp)[:, None]
-        return GroupIndex(pp, tp, dp, pos_tp, pos_pp_src, pos_pp_dst, pos_dp0)
+        pos_pp_dst = pos_pp_src + nc
+        pos_dp0 = np.arange(dp)[None, :] * (tp * cp) \
+            + np.arange(tp * cp)[:, None]
+        pos_cp = cp_group_of = None
+        if cp > 1:
+            # cp group row g = (x*dp + z)*tp + y holds positions
+            # p(k) = x*dp*cp*tp + z*cp*tp + k*tp + y
+            xz = (np.arange(pp)[:, None] * dp +
+                  np.arange(dp)[None, :]) * (cp * tp)
+            gbase = xz.reshape(-1, 1) + np.arange(tp)[None, :]
+            pos_cp = gbase.reshape(-1, 1) + np.arange(cp)[None, :] * tp
+            pos = np.arange(pp * nc)
+            cp_group_of = (pos // (dp * cp * tp) * dp
+                           + pos % (dp * cp * tp) // (cp * tp)) * tp \
+                + pos % tp
+        return GroupIndex(pp, tp, dp, pos_tp, pos_pp_src, pos_pp_dst,
+                          pos_dp0, cp, pos_cp, cp_group_of)
 
 
 class DedicationEngine:
@@ -186,8 +219,9 @@ class DedicationEngine:
 
     def __init__(self, conf: Conf, bw: np.ndarray, prof: Profile,
                  spec: ClusterSpec, index: Optional[GroupIndex] = None):
-        if index is not None and (index.pp, index.tp, index.dp) != \
-                (conf.pp, conf.tp, conf.dp):
+        if index is not None and \
+                (index.pp, index.tp, index.cp, index.dp) != \
+                (conf.pp, conf.tp, conf.cp, conf.dp):
             raise ValueError("GroupIndex shape mismatch")
         self.conf = conf
         self.bw = np.asarray(bw, dtype=float)
@@ -224,6 +258,7 @@ class DedicationEngine:
         self._tp_vals: Optional[np.ndarray] = None
         self._chain_vals: Optional[np.ndarray] = None
         self._dp0_vals: Optional[np.ndarray] = None
+        self._cp_vals: Optional[np.ndarray] = None
 
     # -- per-group recomputation (vectorized gathers over a group subset) --
 
@@ -234,6 +269,15 @@ class DedicationEngine:
         # group's min link is 0 or non-finite, e.g. user-supplied matrices)
         ok = np.isfinite(gbw) & (gbw > 0)
         return np.divide(self.prof.tp_ref_bw, gbw,
+                         out=np.ones_like(gbw), where=ok)
+
+    def _cp_scales(self, perm: np.ndarray, gsel) -> np.ndarray:
+        # ring KV-exchange slowdown per cp group — the cp analogue of
+        # _tp_scales, gathered over the GroupIndex.pos_cp rows
+        ids = perm[self.idx.pos_cp[gsel]]
+        gbw = self._bw_noself[ids[:, :, None], ids[:, None, :]].min(axis=(1, 2))
+        ok = np.isfinite(gbw) & (gbw > 0)
+        return np.divide(self.prof.cp_ref_bw, gbw,
                          out=np.ones_like(gbw), where=ok)
 
     def _chain_times(self, perm: np.ndarray, csel) -> np.ndarray:
@@ -268,14 +312,16 @@ class DedicationEngine:
 
     # -- scoring --
 
-    def _combine(self, tp_vals, chain_vals, dp0_vals) -> float:
+    def _combine(self, tp_vals, chain_vals, dp0_vals, cp_vals) -> float:
         conf, prof = self.conf, self.prof
         c = prof.c_fwd + prof.c_bwd
         scale = 1.0 if conf.tp == 1 else float(max(1.0, tp_vals.max()))
         t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * scale
+        cscale = 1.0 if conf.cp == 1 else float(max(1.0, cp_vals.max()))
+        t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * cscale
         t_pp = 0.0 if conf.pp == 1 else float(max(0.0, chain_vals.max()))
-        t_bubble = conf.pp * (c + t_tp) + t_pp
-        t_straggler = (conf.pp - 1) * (c + t_tp)
+        t_bubble = conf.pp * (c + t_cm) + t_pp
+        t_straggler = (conf.pp - 1) * (c + t_cm)
         t_dp = float(max(0.0, dp0_vals.max()))
         return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
 
@@ -292,7 +338,10 @@ class DedicationEngine:
         self._chain_vals = (self._chain_times(perm, slice(None))
                             if conf.pp > 1 else np.zeros(1))
         self._dp0_vals = self._dp0_times(perm, slice(None))
-        return self._combine(self._tp_vals, self._chain_vals, self._dp0_vals)
+        self._cp_vals = (self._cp_scales(perm, slice(None))
+                         if conf.cp > 1 else np.ones(1))
+        return self._combine(self._tp_vals, self._chain_vals,
+                             self._dp0_vals, self._cp_vals)
 
     def propose(self, cand: np.ndarray, touched: np.ndarray):
         """Score candidate ``cand`` that differs from the committed
@@ -307,7 +356,8 @@ class DedicationEngine:
             is accepted.
         """
         conf = self.conf
-        tp, nc = conf.tp, conf.tp * conf.dp
+        tp, tpc = conf.tp, conf.tp * conf.cp
+        nc = tpc * conf.dp           # positions per pipeline stage
         lo, hi, n_t = int(touched[0]), int(touched[-1]), len(touched)
         span = hi - lo + 1 == n_t    # contiguous (migration/reverse) or swap
 
@@ -338,30 +388,41 @@ class DedicationEngine:
 
         dp0_vals = self._dp0_vals
         if lo < nc:                  # move touches stage-0 positions
+            # stage-0 DP group of position p is p % tpc (blocks of tp*cp)
             if span:
                 hi0 = min(hi, nc - 1)
-                if hi0 - lo + 1 >= tp:
+                if hi0 - lo + 1 >= tpc:
                     ysel = slice(None)
-                elif lo // tp == hi0 // tp:    # span inside one tp block
-                    ysel = slice(lo % tp, hi0 % tp + 1)
+                elif lo // tpc == hi0 // tpc:  # span inside one tp*cp block
+                    ysel = slice(lo % tpc, hi0 % tpc + 1)
                 else:
-                    ysel = np.arange(lo, hi0 + 1) % tp
+                    ysel = np.arange(lo, hi0 + 1) % tpc
             else:
-                yi = lo % tp
+                yi = lo % tpc
                 if hi < nc:
-                    yj = hi % tp
+                    yj = hi % tpc
                     ysel = np.array((yi,) if yi == yj else (yi, yj))
                 else:
                     ysel = np.array((yi,))
             dp0_vals = self._dp0_vals.copy()
             dp0_vals[ysel] = self._dp0_times(cand, ysel)
 
-        val = self._combine(tp_vals, chain_vals, dp0_vals)
-        return val, (tp_vals, chain_vals, dp0_vals)
+        cp_vals = self._cp_vals
+        if conf.cp > 1:
+            # cp groups interleave with stride tp, so a span does not map to
+            # contiguous group rows; the O(|touched|) lookup + unique is
+            # still tiny next to the gathers it saves
+            gsel = np.unique(self.idx.cp_group_of[touched])
+            cp_vals = self._cp_vals.copy()
+            cp_vals[gsel] = self._cp_scales(cand, gsel)
+
+        val = self._combine(tp_vals, chain_vals, dp0_vals, cp_vals)
+        return val, (tp_vals, chain_vals, dp0_vals, cp_vals)
 
     def commit(self, pending) -> None:
         """Promote a :meth:`propose` result to the committed state."""
-        self._tp_vals, self._chain_vals, self._dp0_vals = pending
+        (self._tp_vals, self._chain_vals, self._dp0_vals,
+         self._cp_vals) = pending
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,9 @@
 memory-efficient 1F1B exposes the inter-stage P2P hidden critical path
 (n_mb/pp) times, the DP all-reduce of the *first* stage is the only one on
 the critical path, and every communication term is evaluated on the
-*profiled* bandwidth matrix.  The hot path is fully vectorized (batched
+*profiled* bandwidth matrix.  4D configurations add a per-microbatch ring
+KV-exchange term scaled by the slowest context-parallel group
+(``_cp_scale``); at ``cp == 1`` the term is exactly zero.  The hot path is fully vectorized (batched
 NumPy group gathers + axis reductions); the original pure-Python loop
 implementation is kept as ``pipette_latency_ref`` and is the bit-exact
 oracle for the equivalence tests and benchmarks.
@@ -21,7 +23,7 @@ from typing import Sequence
 from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
                       ring_allreduce_time)
 from .simulator import (Conf, Profile, default_mapping, dp_allreduce_times,
-                        dp_allreduce_times_ref)
+                        dp_allreduce_times_ref, mapping4)
 
 
 def _tp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
@@ -30,12 +32,13 @@ def _tp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     intra-node bandwidth the per-microbatch T_tp was profiled at.  Keeps the
     estimator honest when a mapping strands a TP group across nodes.
 
-    Vectorized: all ``pp * dp`` TP groups are gathered into one
-    ``(pp*dp, tp, tp)`` bandwidth tensor and min-reduced at once.
+    Vectorized: all ``pp * cp * dp`` TP groups are gathered into one
+    ``(pp*cp*dp, tp, tp)`` bandwidth tensor and min-reduced at once.
 
     Args:
         conf: parallelism configuration.
-        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        mapping: ``(pp, tp, dp)`` or ``(pp, tp, cp, dp)`` worker -> GPU
+            dedication.
         bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
         spec: cluster description (unused beyond the signature contract).
         ref_bw: bandwidth the per-microbatch T_tp was profiled at.
@@ -45,8 +48,8 @@ def _tp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """
     if conf.tp == 1:
         return 1.0
-    groups = np.asarray(mapping, dtype=np.intp).transpose(0, 2, 1) \
-        .reshape(conf.pp * conf.dp, conf.tp)
+    groups = mapping4(conf, mapping).transpose(0, 2, 3, 1) \
+        .reshape(conf.pp * conf.cp * conf.dp, conf.tp)
     gbw = min_group_bw_batch(bw, groups)
     ok = np.isfinite(gbw) & (gbw > 0)
     with np.errstate(divide="ignore"):
@@ -59,25 +62,74 @@ def _tp_scale_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """Reference loop implementation of :func:`_tp_scale` (oracle)."""
     if conf.tp == 1:
         return 1.0
+    m4 = mapping4(conf, mapping)
     worst = 1.0
     for x in range(conf.pp):
-        for z in range(conf.dp):
-            group = [int(mapping[x, y, z]) for y in range(conf.tp)]
-            gbw = min_group_bw(bw, group)
-            if np.isfinite(gbw) and gbw > 0:
-                worst = max(worst, ref_bw / gbw)
+        for k in range(conf.cp):
+            for z in range(conf.dp):
+                group = [int(m4[x, y, k, z]) for y in range(conf.tp)]
+                gbw = min_group_bw(bw, group)
+                if np.isfinite(gbw) and gbw > 0:
+                    worst = max(worst, ref_bw / gbw)
+    return worst
+
+
+def _cp_scale(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+              ref_bw: float) -> float:
+    """Profiled slowdown of the slowest context-parallel (ring KV-exchange)
+    group vs the bandwidth T_cp was profiled at — the cp analogue of
+    :func:`_tp_scale`.
+
+    Vectorized: all ``pp * tp * dp`` cp groups are gathered into one
+    ``(pp*tp*dp, cp, cp)`` bandwidth tensor and min-reduced at once.
+
+    Args:
+        conf: parallelism configuration (``cp > 1`` expected; 1.0 otherwise).
+        mapping: worker -> GPU dedication (any mapping4-compatible shape).
+        bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
+        ref_bw: bandwidth the per-microbatch T_cp was profiled at.
+
+    Returns:
+        Scale >= 1.0 to apply to the profiled T_cp.
+    """
+    if conf.cp == 1:
+        return 1.0
+    groups = mapping4(conf, mapping).transpose(0, 1, 3, 2) \
+        .reshape(conf.pp * conf.tp * conf.dp, conf.cp)
+    gbw = min_group_bw_batch(bw, groups)
+    ok = np.isfinite(gbw) & (gbw > 0)
+    with np.errstate(divide="ignore"):
+        scales = np.where(ok, ref_bw / gbw, 1.0)
+    return float(max(1.0, scales.max()))
+
+
+def _cp_scale_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                  ref_bw: float) -> float:
+    """Reference loop implementation of :func:`_cp_scale` (oracle)."""
+    if conf.cp == 1:
+        return 1.0
+    m4 = mapping4(conf, mapping)
+    worst = 1.0
+    for x in range(conf.pp):
+        for y in range(conf.tp):
+            for z in range(conf.dp):
+                group = [int(m4[x, y, k, z]) for k in range(conf.cp)]
+                gbw = min_group_bw(bw, group)
+                if np.isfinite(gbw) and gbw > 0:
+                    worst = max(worst, ref_bw / gbw)
     return worst
 
 
 def _pp_hop_bw(conf: Conf, mapping: np.ndarray, bw: np.ndarray) -> np.ndarray:
-    """Hop bandwidths of every pipeline chain: ``(pp-1, tp*dp)`` gather.
+    """Hop bandwidths of every pipeline chain: ``(pp-1, tp*cp*dp)`` gather.
 
     Pure function of the mapping and bandwidth matrix (no profile), so
     callers scoring many microbatch variants of one shape can cache it.
     """
-    m = np.asarray(mapping, dtype=np.intp)
-    src = m[:-1].reshape(conf.pp - 1, conf.tp * conf.dp)
-    dst = m[1:].reshape(conf.pp - 1, conf.tp * conf.dp)
+    m = mapping4(conf, mapping)
+    n_chains = conf.tp * conf.cp * conf.dp
+    src = m[:-1].reshape(conf.pp - 1, n_chains)
+    dst = m[1:].reshape(conf.pp - 1, n_chains)
     return bw[src, dst]
 
 
@@ -85,7 +137,7 @@ def _t_pp_from_hops(conf: Conf, hop: np.ndarray, msg_pp: float) -> float:
     """Eq. 5 accumulation over pre-gathered hop bandwidths; the per-chain
     sum runs hop by hop in the reference's left-to-right order so results
     are bit-identical to :func:`_t_pp_chain_ref`."""
-    t = np.zeros(conf.tp * conf.dp)
+    t = np.zeros(conf.tp * conf.cp * conf.dp)
     for x in range(conf.pp - 1):
         t = t + 2.0 * msg_pp / hop[x]
     return float(max(0.0, t.max()))
@@ -118,14 +170,16 @@ def _t_pp_chain_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """Reference loop implementation of :func:`_t_pp_chain` (oracle)."""
     if conf.pp == 1:
         return 0.0
+    m4 = mapping4(conf, mapping)
     worst = 0.0
     for z in range(conf.dp):
-        for y in range(conf.tp):
-            t = 0.0
-            for x in range(conf.pp - 1):
-                b = bw[int(mapping[x, y, z]), int(mapping[x + 1, y, z])]
-                t += 2.0 * prof.msg_pp / b
-            worst = max(worst, t)
+        for k in range(conf.cp):
+            for y in range(conf.tp):
+                t = 0.0
+                for x in range(conf.pp - 1):
+                    b = bw[int(m4[x, y, k, z]), int(m4[x + 1, y, k, z])]
+                    t += 2.0 * prof.msg_pp / b
+                worst = max(worst, t)
     return worst
 
 
@@ -136,13 +190,19 @@ def _t_dp_first_stage(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
 
 
 def _combine_eq34(conf: Conf, prof: Profile, tp_scale: float, t_pp: float,
-                  t_dp: float) -> float:
+                  t_dp: float, cp_scale: float = 1.0) -> float:
     """Eq. 3-4 scalar combination shared by every scorer of this model:
-    ``T = T_bubble * (n_mb / pp) + T_straggler + T_dp``."""
+    ``T = T_bubble * (n_mb / pp) + T_straggler + T_dp``.
+
+    The per-microbatch communication folds the TP all-reduce and (for 4D
+    configurations) the ring KV-exchange of context parallelism; at
+    ``cp == 1`` the profiled ``t_cp_*`` terms are exactly 0, so the 3D
+    value is reproduced bit-for-bit."""
     c = prof.c_fwd + prof.c_bwd
     t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * tp_scale
-    t_bubble = conf.pp * (c + t_tp) + t_pp
-    t_straggler = (conf.pp - 1) * (c + t_tp)
+    t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * cp_scale
+    t_bubble = conf.pp * (c + t_cm) + t_pp
+    t_straggler = (conf.pp - 1) * (c + t_cm)
     return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
 
 
@@ -151,8 +211,9 @@ def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """Eq. 3-4: T = T_bubble * (n_mb / pp) + T_straggler + T_dp.
 
     Args:
-        conf: parallelism configuration (pp, tp, dp, microbatching).
-        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        conf: parallelism configuration (pp, tp, cp, dp, microbatching).
+        mapping: ``(pp, tp, dp)`` or ``(pp, tp, cp, dp)`` worker -> GPU
+            dedication.
         bw: ``(G, G)`` profiled bandwidth matrix, bytes/s.
         prof: profiled per-microbatch quantities (:class:`Profile`).
         spec: cluster description.
@@ -162,9 +223,10 @@ def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
         group reductions; bit-identical to :func:`pipette_latency_ref`.
     """
     scale = _tp_scale(conf, mapping, bw, spec, prof.tp_ref_bw)
+    cscale = _cp_scale(conf, mapping, bw, prof.cp_ref_bw)
     t_pp = _t_pp_chain(conf, mapping, bw, prof)
     t_dp = _t_dp_first_stage(conf, mapping, bw, prof, spec)
-    return _combine_eq34(conf, prof, scale, t_pp, t_dp)
+    return _combine_eq34(conf, prof, scale, t_pp, t_dp, cscale)
 
 
 def default_mapping_latencies(confs: Sequence[Conf],
@@ -183,10 +245,10 @@ def default_mapping_latencies(confs: Sequence[Conf],
     run per candidate.  Each output is bit-identical to
     ``pipette_latency(conf, default_mapping(conf), ...)``.
 
-    Precondition (asserted): profiles within one ``(pp, tp, dp)`` shape
-    share ``tp_ref_bw`` and ``msg_dp`` — true of :func:`~repro.core.
-    simulator.build_profile` output for a single workload, where both are
-    ``(pp, tp)``-only quantities.
+    Precondition (asserted): profiles within one ``(pp, tp, cp, dp)`` shape
+    share ``tp_ref_bw``, ``cp_ref_bw`` and ``msg_dp`` — true of
+    :func:`~repro.core.simulator.build_profile` output for a single
+    workload, where all three are shape-only quantities.
 
     Args:
         confs: candidate configurations.
@@ -201,21 +263,23 @@ def default_mapping_latencies(confs: Sequence[Conf],
     out = np.empty(len(confs))
     cache = {}
     for i, (conf, prof) in enumerate(zip(confs, profiles)):
-        shape = (conf.pp, conf.tp, conf.dp)
+        shape = (conf.pp, conf.tp, conf.cp, conf.dp)
         entry = cache.get(shape)
         if entry is None:
             m = default_mapping(conf)
             scale = _tp_scale(conf, m, bw, spec, prof.tp_ref_bw)
+            cscale = _cp_scale(conf, m, bw, prof.cp_ref_bw)
             hop = _pp_hop_bw(conf, m, bw) if conf.pp > 1 else None
             t_dp = float(dp_allreduce_times(conf, m, bw, prof, spec)[0])
-            entry = cache[shape] = (scale, hop, t_dp,
-                                    (prof.tp_ref_bw, prof.msg_dp))
-        scale, hop, t_dp, src_fields = entry
-        assert (prof.tp_ref_bw, prof.msg_dp) == src_fields, \
+            entry = cache[shape] = (scale, cscale, hop, t_dp,
+                                    (prof.tp_ref_bw, prof.cp_ref_bw,
+                                     prof.msg_dp))
+        scale, cscale, hop, t_dp, src_fields = entry
+        assert (prof.tp_ref_bw, prof.cp_ref_bw, prof.msg_dp) == src_fields, \
             f"profiles vary within shape {shape}; per-shape cache invalid"
         t_pp = 0.0 if conf.pp == 1 \
             else _t_pp_from_hops(conf, hop, prof.msg_pp)
-        out[i] = _combine_eq34(conf, prof, scale, t_pp, t_dp)
+        out[i] = _combine_eq34(conf, prof, scale, t_pp, t_dp, cscale)
     return out
 
 
@@ -229,9 +293,11 @@ def pipette_latency_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     c = prof.c_fwd + prof.c_bwd
     t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * _tp_scale_ref(
         conf, mapping, bw, spec, prof.tp_ref_bw)
+    t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * _cp_scale_ref(
+        conf, mapping, bw, prof.cp_ref_bw)
     t_pp = _t_pp_chain_ref(conf, mapping, bw, prof)
-    t_bubble = conf.pp * (c + t_tp) + t_pp
-    t_straggler = (conf.pp - 1) * (c + t_tp)
+    t_bubble = conf.pp * (c + t_cm) + t_pp
+    t_straggler = (conf.pp - 1) * (c + t_cm)
     t_dp = float(dp_allreduce_times_ref(conf, mapping, bw, prof, spec)[0])
     return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
 

@@ -22,7 +22,7 @@ from ..models.config import ModelConfig
 from . import flops as F
 from .cluster import ClusterSpec
 from .mlp import mlp_forward_jit, pad_batch_rows
-from .simulator import Conf, Workload
+from .simulator import Conf, Workload, ring_kv_block_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -40,15 +40,36 @@ def _stage_params(cfg: ModelConfig, pp: int) -> float:
 
 
 def _act_bytes_per_mb(cfg: ModelConfig, conf: Conf, seq: int) -> float:
+    """In-flight activation bytes of one microbatch; context parallelism
+    shards the sequence axis, shrinking activations by ``cp`` (exact no-op
+    at ``cp == 1``)."""
     layers_stage = -(-cfg.n_layers // conf.pp)
     per_layer = seq * conf.bs_micro * (34 * cfg.d_model +
                                        5 * max(cfg.n_heads, 1) * seq)
-    return layers_stage * per_layer / conf.tp
+    return layers_stage * per_layer / conf.tp / conf.cp
+
+
+def _ring_kv_bytes(cfg: ModelConfig, conf: Conf, seq: int) -> float:
+    """Ring-attention KV-exchange buffers (Fujii et al. 2411.06465): the
+    local K+V block in bf16 (the same :func:`~repro.core.simulator.
+    ring_kv_block_bytes` message the latency model prices), double-buffered
+    (in-flight recv + resident), per layer on the stage.  Exactly 0 when
+    ``cp == 1``."""
+    if conf.cp <= 1:
+        return 0.0
+    layers_stage = -(-cfg.n_layers // conf.pp)
+    block = ring_kv_block_bytes(cfg, conf.bs_micro, seq, conf.cp)
+    return 2.0 * layers_stage * block
 
 
 def _config_residual(cfg: ModelConfig, conf: Conf, spec: ClusterSpec) -> float:
-    """Reproducible 'library variance' component, up to 0.6 GB."""
+    """Reproducible 'library variance' component, up to 0.6 GB.
+
+    The hash key only grows a ``|cp`` segment for ``cp > 1`` so every 3D
+    configuration keeps its historical residual bit-for-bit."""
     key = f"{cfg.name}|{conf.pp}|{conf.tp}|{conf.dp}|{conf.bs_micro}|{spec.name}"
+    if conf.cp > 1:
+        key += f"|cp{conf.cp}"
     h = int(hashlib.sha1(key.encode()).hexdigest()[:8], 16)
     return (h % 1000) / 1000.0 * 0.6e9
 
@@ -59,15 +80,18 @@ def ground_truth_memory(w: Workload, conf: Conf, spec: ClusterSpec) -> float:
     weights = _stage_params(cfg, conf.pp) / conf.tp * BYTES_PER_PARAM_STATE
     inflight = min(conf.pp, conf.n_mb)
     acts = _act_bytes_per_mb(cfg, conf, w.seq) * inflight
-    logits = conf.bs_micro * w.seq * cfg.vocab_size * 4.0 * 2 / conf.tp
+    ring_kv = _ring_kv_bytes(cfg, conf, w.seq)
+    logits = conf.bs_micro * w.seq * cfg.vocab_size * 4.0 * 2 \
+        / conf.tp / conf.cp
     framework = (1.1e9                                  # runtime context
                  + 0.15e9                               # collective buffers
                  + 8e6 * (conf.tp + conf.pp)            # per-communicator
+                 + 8e6 * (conf.cp - 1)                  # cp ring communicator
                  + 24e6 * np.log2(conf.dp + 1)          # ring channels
                  + 0.45e9)                              # kernel workspace
     frag = 0.06 * (weights + acts)
     residual = _config_residual(cfg, conf, spec)
-    return weights + acts + logits + framework + frag + residual
+    return weights + acts + ring_kv + logits + framework + frag + residual
 
 
 def analytical_estimate(w: Workload, conf: Conf) -> float:
@@ -86,27 +110,34 @@ def analytical_estimate(w: Workload, conf: Conf) -> float:
 # MLP estimator (Eq. 7)
 # ---------------------------------------------------------------------------
 
-def _features(cfg: ModelConfig, conf: Conf) -> np.ndarray:
-    return _features_batch(cfg, [conf])[0]
+def _features(cfg: ModelConfig, conf: Conf, *,
+              with_cp: bool = False) -> np.ndarray:
+    return _features_batch(cfg, [conf], with_cp=with_cp)[0]
 
 
-def _features_batch(cfg: ModelConfig, confs: Sequence[Conf]) -> np.ndarray:
+def _features_batch(cfg: ModelConfig, confs: Sequence[Conf], *,
+                    with_cp: bool = False) -> np.ndarray:
     """Feature matrix for many configurations in one shot.
 
-    The single source of the 10-field feature order; the scalar
-    :func:`_features` is its one-row special case (bit-for-bit — same
-    elementwise ``np.log`` over float64).
+    The single source of the feature order; the scalar :func:`_features` is
+    its one-row special case (bit-for-bit — same elementwise ``np.log``
+    over float64).  ``with_cp`` appends an 11th ``log(cp)`` column —
+    estimators fit on the 3D space (``with_cp=False``, the default) keep
+    the historical 10-column layout and therefore reproduce their
+    predictions exactly.
 
     Args:
         cfg: model configuration (shared by all rows).
         confs: parallelism configurations.
+        with_cp: include the context-parallel degree as a feature.
 
     Returns:
-        ``(len(confs), 10)`` float64 array.
+        ``(len(confs), 10 or 11)`` float64 array.
     """
     v = np.asarray(
         [[c.n_gpus, cfg.n_layers, cfg.d_model, max(cfg.n_heads, 1),
           c.tp, c.pp, c.dp, c.bs_micro, c.bs_mini, c.bs_global]
+         + ([c.cp] if with_cp else [])
          for c in confs], np.float64)
     return np.log(v)
 
@@ -128,6 +159,13 @@ class MemoryEstimator:
     soft_margin: float = 0.92
     residual: bool = False
     workload_seq: int = 2048
+    # 4D support: True when the fit included the log(cp) feature column.
+    with_cp: bool = False
+    # Fit provenance (0 = unknown/legacy) — lets runtime.elastic.replan
+    # detect that the cluster it is re-planning for no longer matches the
+    # hardware this estimator was fit on.
+    fit_gpu_mem: float = 0.0
+    fit_gpus_per_node: int = 0
 
     def predict_batch(self, cfg: ModelConfig,
                       confs: Sequence[Conf]) -> np.ndarray:
@@ -148,7 +186,13 @@ class MemoryEstimator:
         """
         if not len(confs):
             return np.zeros(0)
-        x = (_features_batch(cfg, confs) - self.x_mean) / self.x_std
+        if not self.with_cp and any(c.cp > 1 for c in confs):
+            raise ValueError(
+                "estimator was fit on the 3D (cp=1) feature space but got a "
+                "cp>1 configuration; refit with fit_memory_estimator("
+                "max_cp=...) to score 4D candidates")
+        x = (_features_batch(cfg, confs, with_cp=self.with_cp)
+             - self.x_mean) / self.x_std
         xb = pad_batch_rows(x.astype(np.float32))
         out = mlp_forward_jit(self.params, jnp.asarray(xb))
         y = np.asarray(out[:len(confs), 0], np.float64)
@@ -169,8 +213,17 @@ class MemoryEstimator:
 
 
 def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
-                    n_layers: int = 10 ** 9) -> List[Conf]:
-    """All valid (pp, tp, dp, bs_micro) with ``pp*tp*dp == n_gpus``.
+                    n_layers: int = 10 ** 9, max_cp: int = 1, seq: int = 0,
+                    strict: bool = True) -> List[Conf]:
+    """All valid (pp, tp, cp, dp, bs_micro) with ``pp*tp*cp*dp == n_gpus``.
+
+    With the default ``max_cp=1`` the context-parallel axis collapses and
+    the enumeration order is the historical 3D one.  ``strict`` (default)
+    drops configurations the memory-efficient 1F1B schedule cannot fill
+    (``n_mb < pp``): the pipeline would idle below depth and the Eq. 3-6
+    exposure count ``n_mb / pp`` goes sub-1, silently mis-scoring them
+    (Megatron-LM's schedule-validity constraint).  Pass ``strict=False``
+    to reproduce the unfiltered space (ablations / legacy comparisons).
 
     Args:
         n_gpus: total GPU count to factorize.
@@ -178,9 +231,14 @@ def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
             the minibatch becomes a microbatch candidate).
         max_tp: optional upper bound on tensor parallelism (0 = unbounded).
         n_layers: pp may not exceed the layer count.
+        max_cp: upper bound on context parallelism (1 = 3D space).
+        seq: sequence length; required for ``max_cp > 1`` (ring attention
+            needs ``seq % cp == 0``), ignored otherwise.
+        strict: filter schedule-invalid ``n_mb < pp`` configurations.
 
     Returns:
-        List of :class:`~repro.core.simulator.Conf`, unpruned.
+        List of :class:`~repro.core.simulator.Conf`; every entry satisfies
+        ``conf.valid()`` and, under ``strict``, ``conf.schedulable()``.
     """
     out = []
     for pp in range(1, n_gpus + 1):
@@ -190,31 +248,52 @@ def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
         for tp in range(1, rest + 1):
             if rest % tp or (max_tp and tp > max_tp):
                 continue
-            dp = rest // tp
-            if bs_global % dp:
-                continue
-            bs_mini = bs_global // dp
-            for mb in range(1, bs_mini + 1):
-                if bs_mini % mb:
+            rest_cd = rest // tp
+            for cp in range(1, min(max_cp, rest_cd) + 1):
+                if rest_cd % cp:
                     continue
-                out.append(Conf(pp, tp, dp, mb, bs_global))
+                if cp > 1 and (seq <= 0 or seq % cp):
+                    continue
+                dp = rest_cd // cp
+                if bs_global % dp:
+                    continue
+                bs_mini = bs_global // dp
+                for mb in range(1, bs_mini + 1):
+                    if bs_mini % mb:
+                        continue
+                    conf = Conf(pp, tp, dp, mb, bs_global, cp=cp)
+                    if strict and conf.n_mb < pp:
+                        continue
+                    out.append(conf)
     return out
 
 
 def profile_memory_dataset(workloads: Sequence[Workload], spec: ClusterSpec,
-                           *, fit_nodes: int = 4) -> Tuple[np.ndarray, np.ndarray, list]:
-    """Profiled (features, log-bytes) pairs from configs on <= fit_nodes."""
+                           *, fit_nodes: int = 4,
+                           max_cp: int = 1) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Profiled (features, log-bytes) pairs from configs on <= fit_nodes.
+
+    ``max_cp > 1`` extends the profiled space to 4D (and switches the
+    feature layout to the 11-column ``with_cp`` variant).
+
+    Profiling deliberately uses ``strict=False``: peak memory is
+    well-defined for any allocatable configuration (the profiler runs a
+    single microbatch, not a full 1F1B iteration), and the extra ``n_mb <
+    pp`` points anchor the fit exactly where the batch-size features are
+    most extreme.  Only the *search* applies the schedule-validity gate."""
     xs, ys, meta = [], [], []
-    max_gpus = fit_nodes * spec.gpus_per_node
+    with_cp = max_cp > 1
     for w in workloads:
         for g_nodes in range(1, fit_nodes + 1):
             g = g_nodes * spec.gpus_per_node
             for conf in enumerate_confs(g, w.bs_global,
                                         max_tp=spec.gpus_per_node,
-                                        n_layers=w.cfg.n_layers):
+                                        n_layers=w.cfg.n_layers,
+                                        max_cp=max_cp, seq=w.seq,
+                                        strict=False):
                 if conf.bs_micro > 16:
                     continue
-                xs.append(_features(w.cfg, conf))
+                xs.append(_features(w.cfg, conf, with_cp=with_cp))
                 ys.append(np.log(ground_truth_memory(w, conf, spec)))
                 meta.append((w, conf))
     return np.asarray(xs), np.asarray(ys), meta
@@ -223,7 +302,8 @@ def profile_memory_dataset(workloads: Sequence[Workload], spec: ClusterSpec,
 def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
                          fit_nodes: int = 4, steps: int = 20_000,
                          hidden: int = 200, depth: int = 5,
-                         seed: int = 0, residual: bool = False) -> MemoryEstimator:
+                         seed: int = 0, residual: bool = False,
+                         max_cp: int = 1) -> MemoryEstimator:
     """Train the §VI MLP memory estimator on small-scale profiles.
 
     Args:
@@ -236,6 +316,9 @@ def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
         seed: init/training seed.
         residual: beyond-paper variant — learn log(actual / analytical)
             instead of log(actual), anchoring extrapolation.
+        max_cp: profile the 4D space up to this context-parallel degree and
+            include the log(cp) feature.  The default (1) reproduces the 3D
+            estimator bit-for-bit; such an estimator refuses cp>1 queries.
 
     Returns:
         Fitted :class:`MemoryEstimator`.
@@ -244,7 +327,8 @@ def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
     import jax.numpy as jnp
     from .mlp import init_mlp, train_mlp
 
-    x, y, meta = profile_memory_dataset(workloads, spec, fit_nodes=fit_nodes)
+    x, y, meta = profile_memory_dataset(workloads, spec, fit_nodes=fit_nodes,
+                                        max_cp=max_cp)
     if residual:
         base = np.array([np.log(analytical_estimate(w, c)) for w, c in meta])
         y = y - base
@@ -257,7 +341,10 @@ def fit_memory_estimator(workloads: Sequence[Workload], spec: ClusterSpec, *,
     params = train_mlp(params, jnp.asarray(xn), jnp.asarray(yn), steps=steps)
     return MemoryEstimator(params, xm, xs, float(ym), float(ys),
                            residual=residual,
-                           workload_seq=workloads[0].seq)
+                           workload_seq=workloads[0].seq,
+                           with_cp=max_cp > 1,
+                           fit_gpu_mem=spec.gpu_mem,
+                           fit_gpus_per_node=spec.gpus_per_node)
 
 
 def mape(pred: Iterable[float], true: Iterable[float]) -> float:

@@ -2,8 +2,9 @@
 
 ``configure()`` runs five batched stages instead of a per-candidate loop:
 
-1. **enumerate** — all (pp, tp, dp, bs_micro) with ``pp*tp*dp = G``, plus
-   the microbatch filters, collected up front;
+1. **enumerate** — all (pp, tp, cp, dp, bs_micro) with ``pp*tp*cp*dp = G``
+   (``cp`` up to the ``max_cp`` knob; 1 keeps the paper's 3D space), plus
+   the microbatch / schedule-validity filters, collected up front;
 2. **memory-prune** — one jitted
    :meth:`~repro.core.memory.MemoryEstimator.predict_batch` call on the
    whole ``(N, F)`` feature matrix, pruned as a vector (the seed code
@@ -22,8 +23,8 @@
 
 The SA stage uses the incremental :class:`~repro.core.dedication.
 DedicationEngine`; its permutation-position index tensors depend only on the
-(pp, tp, dp) shape, so they are built once per shape and shared across every
-microbatch variant of that shape."""
+(pp, tp, cp, dp) shape, so they are built once per shape and shared across
+every microbatch variant of that shape."""
 from __future__ import annotations
 
 import time
@@ -46,7 +47,8 @@ class Candidate:
 
     Attributes:
         conf: parallelism configuration.
-        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        mapping: ``(pp, tp, dp)`` (or ``(pp, tp, cp, dp)`` when
+            ``conf.cp > 1``) worker -> GPU dedication.
         latency: estimated seconds/iteration (Eq. 3-6).
         mem_pred: predicted peak bytes/GPU (``nan`` without an estimator).
     """
@@ -89,6 +91,7 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
               sa_seconds: float = 1.0, sa_iters: int = 8_000,
               n_chains: int = 1, sa_topk: Optional[int] = None,
               max_micro: int = 16, fixed_micro: Optional[int] = None,
+              max_cp: int = 1, max_tp: int = 0,
               seed: int = 0,
               dedicate: bool = True) -> SearchResult:
     """Pipette (Algorithm 1): enumerate -> memory-prune -> dedicate -> rank.
@@ -100,7 +103,9 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
             :func:`~repro.core.cluster.profile_bandwidth`.
         estimator: optional MLP memory estimator; prunes configs predicted
             to exceed ``mem_limit * soft_margin`` (one batched forward for
-            the whole enumeration).
+            the whole enumeration).  Must have been fit with
+            ``max_cp > 1`` (:func:`~repro.core.memory.fit_memory_estimator`)
+            to score a 4D search.
         mem_limit: per-GPU memory budget in bytes (default ``spec.gpu_mem``).
         sa_seconds / sa_iters: total SA budget per candidate (split across
             chains when ``n_chains > 1``).
@@ -112,6 +117,11 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
             exhaustive behaviour.
         max_micro: skip configurations with ``bs_micro`` above this.
         fixed_micro: restrict to one microbatch size (ablations).
+        max_cp: open the context-parallel axis up to this degree (1 —
+            the default — is the paper's 3D space, bit-exact with the
+            pre-4D pipeline).
+        max_tp: optional cap on tensor parallelism (0 = unbounded); useful
+            to keep TP groups inside a node (``spec.gpus_per_node``).
         seed: RNG seed; the whole search is deterministic given it.
         dedicate: ``False`` gives the PPT-L ablation (latency+memory
             estimators only, identity mapping).
@@ -124,7 +134,9 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
 
     # stage 1: enumerate the whole search space up front
     confs = [conf for conf in enumerate_confs(spec.n_gpus, w.bs_global,
-                                              n_layers=w.cfg.n_layers)
+                                              n_layers=w.cfg.n_layers,
+                                              max_cp=max_cp, max_tp=max_tp,
+                                              seq=w.seq)
              if conf.bs_micro <= max_micro
              and (fixed_micro is None or conf.bs_micro == fixed_micro)]
     enum_s = time.perf_counter() - t0
@@ -161,14 +173,14 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
         else:
             order = np.argsort(base_lat, kind="stable")
             sa_set = set(int(i) for i in order[:max(sa_topk, 0)])
-        index_cache: Dict[Tuple[int, int, int], GroupIndex] = {}
+        index_cache: Dict[Tuple[int, int, int, int], GroupIndex] = {}
         for i, (conf, prof) in enumerate(zip(survivors, profiles)):
             if i not in sa_set:
                 cands.append(Candidate(conf, default_mapping(conf),
                                        float(base_lat[i]),
                                        float(mem_preds[i])))
                 continue
-            shape = (conf.pp, conf.tp, conf.dp)
+            shape = (conf.pp, conf.tp, conf.cp, conf.dp)
             idx = index_cache.get(shape)
             if idx is None:
                 idx = index_cache[shape] = GroupIndex.build(conf)

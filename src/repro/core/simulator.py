@@ -1,4 +1,4 @@
-"""Discrete-event simulator of 3D-parallel training iterations.
+"""Discrete-event simulator of 3D/4D-parallel training iterations.
 
 This plays the role of the *real cluster* in the paper's evaluation
 (DESIGN.md §2): configurations recommended by Pipette and the baselines are
@@ -8,10 +8,15 @@ over the heterogeneous bandwidth matrix, including the effects the
 first-order models do NOT capture — per-link p2p chains, fwd/bwd link
 contention, per-op jitter and warmup transients — so estimator MAPEs are
 meaningful.
+
+Beyond the paper, :class:`Conf` carries a fourth, *context-parallel* degree
+``cp`` (ring attention over sequence shards, Fujii et al. 2411.06465): each
+cp rank holds ``seq / cp`` tokens and exchanges KV blocks around the cp ring
+every layer.  ``cp == 1`` is a strict special case — every quantity below is
+bit-identical to the historical 3D implementation.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
@@ -29,15 +34,23 @@ from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
 
 @dataclass(frozen=True)
 class Conf:
+    """A 4D parallelism configuration: (pp, tp, cp, dp) plus microbatching.
+
+    ``cp`` (context parallelism: ring attention over sequence shards)
+    defaults to 1, which reproduces the paper's 3D search space exactly —
+    every historical ``Conf(pp, tp, dp, bs_micro, bs_global)`` call keeps
+    its meaning.
+    """
     pp: int
     tp: int
     dp: int
     bs_micro: int
     bs_global: int
+    cp: int = 1
 
     @property
     def n_gpus(self) -> int:
-        return self.pp * self.tp * self.dp
+        return self.pp * self.tp * self.cp * self.dp
 
     @property
     def bs_mini(self) -> int:
@@ -48,11 +61,29 @@ class Conf:
         return self.bs_mini // self.bs_micro
 
     def valid(self) -> bool:
-        return (self.bs_global % self.dp == 0 and
-                self.bs_mini % self.bs_micro == 0)
+        """Divisibility and an explicit non-empty-schedule check.
+
+        ``n_mb == 0`` (a microbatch larger than the minibatch) is rejected
+        here rather than relying on every caller to notice that Eq. 3-6
+        degenerate at zero microbatches.
+        """
+        return (min(self.pp, self.tp, self.cp, self.dp,
+                    self.bs_micro) >= 1 and
+                self.bs_global % self.dp == 0 and
+                self.bs_mini % self.bs_micro == 0 and
+                self.n_mb >= 1)
+
+    def schedulable(self) -> bool:
+        """True when memory-efficient 1F1B can fill the pipeline: the
+        schedule needs at least ``pp`` microbatches, otherwise the Eq. 3-6
+        exposure count ``n_mb / pp`` drops below one and the model scores a
+        schedule that cannot exist (see ``enumerate_confs``'s strict gate).
+        """
+        return self.valid() and self.n_mb >= self.pp
 
     def __str__(self):
-        return (f"pp{self.pp}·tp{self.tp}·dp{self.dp}"
+        cp = f"·cp{self.cp}" if self.cp > 1 else ""
+        return (f"pp{self.pp}·tp{self.tp}{cp}·dp{self.dp}"
                 f"·mb{self.bs_micro}(n_mb={self.n_mb})")
 
 
@@ -65,18 +96,50 @@ class Workload:
 
 
 def default_mapping(conf: Conf) -> np.ndarray:
-    """Identity (node-major) worker dedication: tp contiguous, then dp,
-    then pp — the standard Megatron-LM order.
+    """Identity (node-major) worker dedication: tp contiguous, then cp,
+    then dp, then pp — the standard Megatron-LM order extended with the
+    context axis between tp and dp.
 
     Args:
         conf: parallelism configuration.
 
     Returns:
-        ``(pp, tp, dp)`` integer mapping with GPU ids ``0..n_gpus-1``.
+        ``(pp, tp, dp)`` integer mapping with GPU ids ``0..n_gpus-1`` when
+        ``cp == 1`` (the historical shape), else ``(pp, tp, cp, dp)``.
     """
     g = np.arange(conf.n_gpus)
-    # worker (x, y, z) -> gpu x*(dp*tp) + z*tp + y
-    return g.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
+    if conf.cp == 1:
+        # worker (x, y, z) -> gpu x*(dp*tp) + z*tp + y
+        return g.reshape(conf.pp, conf.dp, conf.tp).transpose(0, 2, 1)
+    # worker (x, y, k, z) -> gpu x*(dp*cp*tp) + z*(cp*tp) + k*tp + y
+    return g.reshape(conf.pp, conf.dp, conf.cp,
+                     conf.tp).transpose(0, 3, 2, 1)
+
+
+def mapping4(conf: Conf, mapping: np.ndarray) -> np.ndarray:
+    """Canonical ``(pp, tp, cp, dp)`` view of a worker mapping.
+
+    Accepts the legacy 3D ``(pp, tp, dp)`` shape (valid only when
+    ``cp == 1``, where it is the same memory layout) as well as the 4D
+    shape or anything reshapeable to it; every mapping consumer in
+    ``latency``/``simulator``/``dedication`` normalizes through here.
+    """
+    return np.asarray(mapping, dtype=np.intp).reshape(
+        conf.pp, conf.tp, conf.cp, conf.dp)
+
+
+def ring_kv_block_bytes(cfg: ModelConfig, bs_micro: int, seq: int,
+                        cp: int) -> float:
+    """Bytes of the K+V block one cp rank passes per ring-attention step
+    (bf16): ``2 (K and V) * bs_micro * seq/cp * kv_dim * 2 bytes``.
+
+    The single source of the block-size formula — both the latency/profile
+    side (:func:`_profile_dynamic`) and the memory ground truth
+    (``memory._ring_kv_bytes``) must price the same message, or estimator
+    MAPEs silently drift.
+    """
+    kv_dim = max(cfg.n_kv_heads, 1) * cfg.hd if cfg.n_heads else cfg.d_model
+    return 2 * bs_micro * (seq / cp) * kv_dim * 2.0
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +156,11 @@ class Profile:
     msg_dp: float                  # per-GPU gradient bytes (stage share)
     stage_params: float            # params on the largest stage
     tp_ref_bw: float = 300e9       # bandwidth T_tp was profiled at
+    # --- context parallelism (all exactly 0 / unused when cp == 1) ---
+    t_cp_fwd: float = 0.0          # per-microbatch ring KV-exchange s, fwd
+    t_cp_bwd: float = 0.0
+    msg_cp: float = 0.0            # bytes of one KV block sent per ring step
+    cp_ref_bw: float = 300e9       # bandwidth T_cp was profiled at
 
 
 def _profile_static(w: Workload, spec: ClusterSpec,
@@ -118,15 +186,23 @@ def _profile_static(w: Workload, spec: ClusterSpec,
 
 def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
                      static: Tuple[float, float, float]) -> Profile:
-    """The ``bs_micro``-dependent remainder of :func:`build_profile`."""
+    """The ``(bs_micro, cp)``-dependent remainder of :func:`build_profile`.
+
+    Context parallelism shards every per-microbatch quantity over the
+    sequence axis: each cp rank computes/communicates ``1 / cp`` of the
+    tokens (``tokens_mb / cp`` is an exact float at ``cp == 1``, so the 3D
+    numbers are reproduced bit-for-bit), and a ring KV-exchange term
+    appears (``cp - 1`` steps per layer, Fujii et al. 2411.06465).
+    """
     cfg = w.cfg
     stage_params, msg_dp, tp_ref_bw = static
     layers_stage = -(-cfg.n_layers // conf.pp)
-    tokens_mb = conf.bs_micro * w.seq
+    tokens_mb = conf.bs_micro * w.seq / conf.cp     # per cp-rank tokens
     n_active = F.active_param_count(cfg)
     body = n_active - 2 * cfg.vocab_size * cfg.d_model
     body = max(body, int(0.5 * n_active))
     stage_flops_fwd = 2.0 * (body * layers_stage / cfg.n_layers) * tokens_mb
+    # ring attention: seq/cp local queries attend over the full sequence
     stage_flops_fwd += 2.0 * F.attention_flops(cfg, w.seq, tokens_mb, train=False) \
         * layers_stage / cfg.n_layers / 2
     # embedding + head flops live on first/last stage; fold in evenly
@@ -142,12 +218,25 @@ def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
     # Megatron TP: 2 all-reduces per layer per direction.  When a TP group
     # cannot fit inside a node, its ring bottlenecks on the (nominal)
     # inter-node link — visible to every configurator.
-    msg_tp = conf.bs_micro * w.seq * cfg.d_model * 2
+    msg_tp = conf.bs_micro * w.seq * cfg.d_model * 2 / conf.cp
     t_ar = ring_allreduce_time(msg_tp, tp_ref_bw, conf.tp)
     t_tp = 2 * layers_stage * t_ar
-    msg_pp = conf.bs_micro * w.seq * cfg.d_model * 2.0
+    msg_pp = conf.bs_micro * w.seq * cfg.d_model * 2.0 / conf.cp
+
+    # Ring-attention KV exchange: cp-1 steps per layer, each passing the
+    # local K+V block (bf16) around the cp ring; backward additionally
+    # returns dK/dV.  Zero when cp == 1 so the 3D path is untouched.
+    if conf.cp > 1:
+        msg_cp = ring_kv_block_bytes(cfg, conf.bs_micro, w.seq, conf.cp)
+        cp_ref_bw = spec.intra_bw if conf.tp * conf.cp <= spec.gpus_per_node \
+            else spec.inter_bw
+        t_cp_fwd = layers_stage * (conf.cp - 1) * msg_cp / cp_ref_bw
+        t_cp_bwd = 2.0 * t_cp_fwd
+    else:
+        msg_cp, t_cp_fwd, t_cp_bwd, cp_ref_bw = 0.0, 0.0, 0.0, tp_ref_bw
     return Profile(c_fwd, c_bwd, t_tp, 2 * t_tp, msg_pp, msg_dp,
-                   stage_params, tp_ref_bw)
+                   stage_params, tp_ref_bw, t_cp_fwd, t_cp_bwd, msg_cp,
+                   cp_ref_bw)
 
 
 def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
@@ -172,13 +261,13 @@ def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
 class ProfileCache:
     """Memoized :func:`build_profile` for one ``(workload, spec)`` pair.
 
-    A :class:`Profile` is fully determined by ``(pp, tp, bs_micro)`` — it
-    does not depend on ``dp`` — so the configurator's enumeration (which
+    A :class:`Profile` is fully determined by ``(pp, tp, cp, bs_micro)`` —
+    it does not depend on ``dp`` — so the configurator's enumeration (which
     yields many ``dp``/microbatch variants per shape) hits the cache heavily.
     The ``(pp, tp)``-only fields (:func:`_profile_static`) are additionally
-    shared across microbatch variants; the ``bs_micro``-dependent remainder
-    is built lazily on first use.  Returned profiles are bit-identical to
-    :func:`build_profile`.
+    shared across microbatch and context-parallel variants; the
+    ``(bs_micro, cp)``-dependent remainder is built lazily on first use.
+    Returned profiles are bit-identical to :func:`build_profile`.
 
     Example:
         >>> cache = ProfileCache(w, spec)
@@ -190,12 +279,12 @@ class ProfileCache:
         self.w = w
         self.spec = spec
         self._static: Dict[Tuple[int, int], Tuple[float, float, float]] = {}
-        self._full: Dict[Tuple[int, int, int], Profile] = {}
+        self._full: Dict[Tuple[int, int, int, int], Profile] = {}
 
     def get(self, conf: Conf) -> Profile:
         """The :class:`Profile` for ``conf``, computed at most once per
-        ``(pp, tp, bs_micro)``."""
-        key = (conf.pp, conf.tp, conf.bs_micro)
+        ``(pp, tp, cp, bs_micro)``."""
+        key = (conf.pp, conf.tp, conf.cp, conf.bs_micro)
         prof = self._full.get(key)
         if prof is None:
             skey = key[:2]
@@ -281,14 +370,15 @@ def dp_allreduce_times(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """Hierarchical-ring DP all-reduce seconds per pipeline stage (Eq. 6
     structure, evaluated on an arbitrary bandwidth matrix).
 
-    Vectorized: all ``pp * tp`` data-parallel groups are gathered and reduced
-    in one batch (see :func:`hier_allreduce_batch`); per stage the slowest
-    tensor-parallel slice wins.  Matches :func:`dp_allreduce_times_ref`
+    Vectorized: all ``pp * tp * cp`` data-parallel groups are gathered and
+    reduced in one batch (see :func:`hier_allreduce_batch`); per stage the
+    slowest (tp, cp) slice wins.  Matches :func:`dp_allreduce_times_ref`
     bit-for-bit.
 
     Args:
         conf: parallelism configuration.
-        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        mapping: ``(pp, tp, dp)`` or ``(pp, tp, cp, dp)`` worker -> GPU
+            dedication.
         bw: ``(G, G)`` bandwidth matrix in bytes/s.
         prof: profiled per-microbatch quantities (uses ``msg_dp``).
         spec: cluster description.
@@ -296,36 +386,40 @@ def dp_allreduce_times(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     Returns:
         ``(pp,)`` all-reduce seconds per pipeline stage.
     """
-    ids = np.asarray(mapping, dtype=np.intp).reshape(conf.pp * conf.tp,
-                                                     conf.dp)
+    ids = mapping4(conf, mapping).reshape(conf.pp * conf.tp * conf.cp,
+                                          conf.dp)
     t = hier_allreduce_batch(ids, np.asarray(bw), prof.msg_dp, spec)
-    return np.maximum(t.reshape(conf.pp, conf.tp).max(axis=1), 0.0)
+    return np.maximum(t.reshape(conf.pp, conf.tp * conf.cp).max(axis=1), 0.0)
 
 
 def dp_allreduce_times_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                            prof: Profile, spec: ClusterSpec) -> np.ndarray:
     """Reference (pure-Python loop) implementation of
     :func:`dp_allreduce_times`; kept as the equivalence/benchmark oracle."""
+    m4 = mapping4(conf, mapping)
     out = np.zeros(conf.pp)
     for x in range(conf.pp):
         worst = 0.0
         for y in range(conf.tp):
-            group = [int(mapping[x, y, z]) for z in range(conf.dp)]
-            nodes: Dict[int, list] = {}
-            for gpu in group:
-                nodes.setdefault(spec.node_of(gpu), []).append(gpu)
-            intra_t = 0.0
-            for gs in nodes.values():
-                if len(gs) > 1:
-                    t = ring_allreduce_time(prof.msg_dp, min_group_bw(bw, gs),
-                                            len(gs), phases=4)
-                    intra_t = max(intra_t, t)
-            reps = [gs[0] for gs in nodes.values()]
-            inter_t = 0.0
-            if len(reps) > 1:
-                inter_t = ring_allreduce_time(prof.msg_dp, min_group_bw(bw, reps),
-                                              len(reps), phases=2)
-            worst = max(worst, intra_t + inter_t)
+            for k in range(conf.cp):
+                group = [int(m4[x, y, k, z]) for z in range(conf.dp)]
+                nodes: Dict[int, list] = {}
+                for gpu in group:
+                    nodes.setdefault(spec.node_of(gpu), []).append(gpu)
+                intra_t = 0.0
+                for gs in nodes.values():
+                    if len(gs) > 1:
+                        t = ring_allreduce_time(prof.msg_dp,
+                                                min_group_bw(bw, gs),
+                                                len(gs), phases=4)
+                        intra_t = max(intra_t, t)
+                reps = [gs[0] for gs in nodes.values()]
+                inter_t = 0.0
+                if len(reps) > 1:
+                    inter_t = ring_allreduce_time(prof.msg_dp,
+                                                  min_group_bw(bw, reps),
+                                                  len(reps), phases=2)
+                worst = max(worst, intra_t + inter_t)
         out[x] = worst
     return out
 
@@ -337,11 +431,14 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """Event-driven 1F1B iteration on an arbitrary bandwidth matrix.
 
     Models what the first-order estimators do not: per-link p2p chains,
-    fwd/bwd link contention, per-op jitter and warmup transients.
+    fwd/bwd link contention, per-op jitter and warmup transients.  With
+    ``conf.cp > 1`` every forward/backward op additionally carries the ring
+    KV-exchange time of its slowest cp group, evaluated on the true links.
 
     Args:
         conf: parallelism configuration.
-        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        mapping: ``(pp, tp, dp)`` or ``(pp, tp, cp, dp)`` worker -> GPU
+            dedication.
         bw: bandwidth matrix to "run" on (usually the ground truth).
         prof: profiled per-microbatch quantities.
         spec: cluster description.
@@ -353,22 +450,32 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
         Dict with ``total`` seconds plus per-stage/per-link breakdowns
         (``stage_finish``, ``t_dp``, ``t_pp``).
     """
-    pp, tp, dp, n_mb = conf.pp, conf.tp, conf.dp, conf.n_mb
+    pp, tp, cp, dp, n_mb = conf.pp, conf.tp, conf.cp, conf.dp, conf.n_mb
     rng = np.random.default_rng(seed * 131071 + conf.n_gpus)
 
-    m_idx = np.asarray(mapping, dtype=np.intp)
+    m4 = mapping4(conf, mapping)
 
-    # per-replica p2p link times between adjacent stages (slowest tp pair)
+    # per-replica p2p link times between adjacent stages (slowest tp/cp pair)
     t_pp = np.zeros((dp, max(pp - 1, 1)))
     if pp > 1:
-        link = bw[m_idx[:-1], m_idx[1:]].min(axis=1)      # (pp-1, dp)
+        link = bw[m4[:-1], m4[1:]].reshape(pp - 1, tp * cp, dp).min(axis=1)
         t_pp = (prof.msg_pp / link).T
 
-    # actual TP time uses true intra-group links (model uses nominal)
-    groups = m_idx.transpose(0, 2, 1).reshape(pp * dp, tp)
+    # actual TP time uses true intra-group links (model uses nominal);
+    # per (stage, replica) the slowest cp slice wins
+    groups = m4.transpose(0, 2, 3, 1).reshape(pp * cp * dp, tp)
     gbw = min_group_bw_batch(bw, groups)
     scale = np.where(np.isfinite(gbw) & (gbw > 0), prof.tp_ref_bw / gbw, 1.0)
-    t_tpf = (prof.t_tp_fwd * scale).reshape(pp, dp).T
+    t_tpf = (prof.t_tp_fwd * scale).reshape(pp, cp, dp).max(axis=1).T
+
+    # ring KV-exchange time on the true cp-group links (worst tp slice)
+    t_cpf = np.zeros((dp, pp))
+    if cp > 1:
+        cgroups = m4.transpose(0, 1, 3, 2).reshape(pp * tp * dp, cp)
+        cgbw = min_group_bw_batch(bw, cgroups)
+        cscale = np.where(np.isfinite(cgbw) & (cgbw > 0),
+                          prof.cp_ref_bw / cgbw, 1.0)
+        t_cpf = (prof.t_cp_fwd * cscale).reshape(pp, tp, dp).max(axis=1).T
 
     finish_stage = np.zeros((dp, pp))
     for z in range(dp):
@@ -392,7 +499,7 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                                 break
                             cont = 1.0 + (contention if m >= pp else 0.0)
                             ready = dep + t_pp[z, s - 1] * cont
-                        dur = prof.c_fwd + t_tpf[z, s]
+                        dur = prof.c_fwd + t_tpf[z, s] + t_cpf[z, s]
                     else:
                         if s == pp - 1:
                             dep = done_f.get((s, m))
@@ -401,7 +508,7 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                         if dep is None:
                             break
                         ready = dep if s == pp - 1 else dep + t_pp[z, s] * (1 + contention)
-                        dur = prof.c_bwd + 2 * t_tpf[z, s]
+                        dur = prof.c_bwd + 2 * t_tpf[z, s] + 2 * t_cpf[z, s]
                     if m == 0:
                         dur *= 1.03          # warmup transient
                     dur *= 1.0 + jitter * rng.standard_normal()
@@ -432,7 +539,8 @@ def measure(conf: Conf, mapping: np.ndarray, w: Workload, spec: ClusterSpec,
 
     Args:
         conf: parallelism configuration.
-        mapping: ``(pp, tp, dp)`` worker -> GPU dedication.
+        mapping: ``(pp, tp, dp)`` or ``(pp, tp, cp, dp)`` worker -> GPU
+            dedication.
         w: workload (profiled on the fly via :func:`build_profile`).
         spec: cluster description.
         bw_true: ground-truth bandwidth matrix.

@@ -10,7 +10,6 @@ backend and kernel-side FLOPs/bytes are identical for roofline purposes
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

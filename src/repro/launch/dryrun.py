@@ -61,7 +61,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
              n_micro: int, fsdp: bool, variant: str = "",
              tag: str = "") -> dict:
     import jax
-    import jax.numpy as jnp
 
     from .. import configs
     from ..models.config import SHAPES

@@ -38,9 +38,16 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     return jax.sharding.Mesh(devs.reshape(tuple(shape)), tuple(axes))
 
 
-def mesh_from_mapping(conf, mapping: np.ndarray, axes=("pipe", "model", "data")):
-    """Pipette Map (pp, tp, dp) -> Mesh whose [x, y, z] device is GPU
-    f(x, y, z).  Physical adjacency in the cluster is preserved by the
-    device order, so the mapping steers which links each axis uses."""
+def mesh_from_mapping(conf, mapping: np.ndarray, axes=None):
+    """Pipette Map (pp, tp[, cp], dp) -> Mesh whose [x, y(, k), z] device
+    is GPU f(...).  Physical adjacency in the cluster is preserved by the
+    device order, so the mapping steers which links each axis uses.
+
+    ``axes`` defaults to ``("pipe", "model", "data")`` for a 3D mapping and
+    ``("pipe", "model", "context", "data")`` for a 4D one."""
+    mapping = np.asarray(mapping)
+    if axes is None:
+        axes = ("pipe", "model", "context", "data") if mapping.ndim == 4 \
+            else ("pipe", "model", "data")
     devs = np.array(jax.devices())[:conf.n_gpus]
     return jax.sharding.Mesh(devs[mapping], tuple(axes))

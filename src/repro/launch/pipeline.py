@@ -10,8 +10,7 @@ built from the SA worker dedication (launch/mesh.py::mesh_from_mapping).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,20 +11,16 @@ fewer collective bytes.
 """
 from __future__ import annotations
 
-from typing import Dict
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..models import model as M
 from ..models.config import ModelConfig
 from ..models.layers import rms_norm, swiglu
-from ..models.sharding import ShardCtx
 from ..models.transformer import _proj_qkv, init_params
 from ..models.attention import chunked_attention
 from ..optim.adamw import AdamW
-from .pipeline import pipeline_loss_fn, stage_params_split
+from .pipeline import pipeline_loss_fn
 
 
 def _dense_layer(lp, x, cfg: ModelConfig):

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import model as M
-from ..models.config import SHAPES, ModelConfig, ShapeSpec
+from ..models.config import ModelConfig, ShapeSpec
 from ..models.sharding import ShardCtx, tree_shardings
 from ..optim.adamw import AdamW
 

@@ -13,13 +13,9 @@ full driver runs on CPU.
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None):

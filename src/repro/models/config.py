@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional
 
 
 @dataclass(frozen=True)

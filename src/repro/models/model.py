@@ -7,7 +7,7 @@ weight-tied shared-attention rows of hybrid archs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ per-layer caches (full KV vs ring-buffer vs SSM state) stay exact.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import mamba as mam
-from .attention import chunked_attention, decode_attention
+from .attention import chunked_attention
 from .config import ModelConfig
 from .layers import apply_rope, dense_init, ones, rms_norm, swiglu, zeros
 from .moe import moe_block

@@ -7,7 +7,7 @@ axis; update math runs in fp32 and casts back to the param dtype.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

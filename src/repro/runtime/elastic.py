@@ -15,7 +15,7 @@ from typing import Optional
 import numpy as np
 
 from ..core.cluster import ClusterSpec, profile_bandwidth
-from ..core.memory import MemoryEstimator
+from ..core.memory import MemoryEstimator, fit_memory_estimator
 from ..core.search import SearchResult, configure
 from ..core.simulator import Workload
 
@@ -25,23 +25,57 @@ class ElasticPlan:
     result: SearchResult
     n_gpus: int
     bw: np.ndarray
+    refit_estimator: bool = False
+
+
+def _estimator_stale(est: MemoryEstimator, spec: ClusterSpec,
+                     max_cp: int = 1) -> bool:
+    """True when ``est`` was fit on hardware that no longer matches
+    ``spec`` — a shrunk node count is fine (the features extrapolate over
+    GPU count by design), but a different per-GPU memory or node width
+    changes the ground truth the fit learned, so its predictions are
+    invalid for the new cluster.  A 3D-fit estimator asked to score a 4D
+    re-plan (``max_cp > 1`` without ``with_cp``) is stale for the same
+    reason: it cannot price cp>1 candidates.  Estimators without hardware
+    provenance (legacy ``fit_gpu_mem == 0``) are trusted on that axis as
+    before."""
+    if max_cp > 1 and not est.with_cp:
+        return True
+    if est.fit_gpu_mem == 0.0 and est.fit_gpus_per_node == 0:
+        return False
+    return (est.fit_gpu_mem != spec.gpu_mem or
+            est.fit_gpus_per_node != spec.gpus_per_node)
 
 
 def replan(w: Workload, spec: ClusterSpec, healthy_nodes: int, *,
            estimator: Optional[MemoryEstimator] = None,
-           sa_seconds: float = 0.5, seed: int = 0) -> ElasticPlan:
+           sa_seconds: float = 0.5, seed: int = 0,
+           refit_steps: int = 2_000, **configure_kw) -> ElasticPlan:
     """Re-plan for a degraded/grown cluster of ``healthy_nodes`` nodes.
 
-    Steps: re-profile the (changed) interconnect, re-run Algorithm 1 on
-    the new GPU count, return the plan whose mapping the runtime feeds to
-    ``launch.mesh.mesh_from_mapping`` before restoring the checkpoint with
-    the new partition specs."""
+    Steps: re-profile the (changed) interconnect, validate the memory
+    estimator against the new hardware (refit on ``refit_steps`` training
+    steps when ``gpu_mem`` or ``gpus_per_node`` changed — a fit from the
+    original spec would silently mis-predict peaks on different GPUs),
+    re-run Algorithm 1 on the new GPU count, and return the plan whose
+    mapping the runtime feeds to ``launch.mesh.mesh_from_mapping`` before
+    restoring the checkpoint with the new partition specs.
+
+    Extra keyword arguments are forwarded to
+    :func:`~repro.core.search.configure` (e.g. ``sa_topk``, ``max_cp``)."""
     new_spec = spec.with_nodes(healthy_nodes)
     bw, _ = profile_bandwidth(new_spec)
+    refit = estimator is not None and _estimator_stale(
+        estimator, new_spec, configure_kw.get("max_cp", 1))
+    if refit:
+        estimator = fit_memory_estimator(
+            [w], new_spec, fit_nodes=min(2, healthy_nodes),
+            steps=refit_steps, residual=estimator.residual,
+            max_cp=configure_kw.get("max_cp", 1))
     res = configure(w, new_spec, bw, estimator=estimator,
-                    sa_seconds=sa_seconds, seed=seed)
+                    sa_seconds=sa_seconds, seed=seed, **configure_kw)
     if res.best is None:
         raise RuntimeError(
             f"no feasible configuration for {new_spec.n_gpus} GPUs — "
-            f"memory limit too tight for every (pp, tp, dp, bs_micro)")
-    return ElasticPlan(res, new_spec.n_gpus, bw)
+            f"memory limit too tight for every (pp, tp, cp, dp, bs_micro)")
+    return ElasticPlan(res, new_spec.n_gpus, bw, refit_estimator=refit)

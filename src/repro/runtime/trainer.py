@@ -17,11 +17,7 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Any, Callable, Dict, Optional
-
-import jax
-import numpy as np
+from typing import Callable, Optional
 
 from ..checkpoint.manager import CheckpointManager
 

@@ -3,8 +3,6 @@ objective improvement, and end-to-end behaviour on a heterogeneous
 cluster."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (MID_RANGE, Conf, Workload, anneal, build_profile,
                         default_mapping, perm_to_mapping,
@@ -12,6 +10,13 @@ from repro.core import (MID_RANGE, Conf, Workload, anneal, build_profile,
 from repro.core.dedication import _move
 from repro.core.latency import pipette_latency
 from repro.models.config import ModelConfig
+
+# optional dep: skip the module without failing collection; assigning the
+# names (instead of `from hypothesis import ...` after a statement) keeps
+# every real import at the top of the file (ruff E402)
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hyp.given, hyp.settings
 
 GPT = ModelConfig(name="g", family="dense", n_layers=24, d_model=1920,
                   n_heads=20, n_kv_heads=20, d_ff=7680, vocab_size=51200)

@@ -4,13 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.selective_scan import selective_scan
+
+# optional dep: skip the module without failing collection; assigning the
+# names (instead of `from hypothesis import ...` after a statement) keeps
+# every real import at the top of the file (ruff E402)
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hyp.given, hyp.settings
 
 KEY = jax.random.PRNGKey(7)
 

@@ -85,6 +85,28 @@ def test_simulator_close_to_model_on_uniform_cluster():
         assert sim == pytest.approx(est, rel=0.08), conf
 
 
+def test_simulator_close_to_model_on_boundary_schedules():
+    """Estimator/simulator agreement exactly where the schedule-validity
+    gate bites: n_mb == pp (zero steady-state slack), pp == 1 (no pipeline
+    at all), and cp > 1 (ring KV-exchange on every op)."""
+    bw = uniform_bw(SPEC)
+    cases = [Conf(8, 8, 1, 4, 32),            # n_mb == pp == 8
+             Conf(4, 4, 4, 4, 64),            # n_mb == pp == 4
+             Conf(1, 8, 8, 2, 256),           # pp == 1
+             Conf(4, 4, 2, 2, 16, cp=2),      # 4D, n_mb == pp == 4
+             Conf(4, 4, 2, 4, 128, cp=2),     # 4D, steady state (n_mb 16)
+             Conf(2, 4, 2, 2, 64, cp=4)]      # 4D, deeper ring
+    for conf in cases:
+        assert conf.schedulable(), conf
+        w = Workload(GPT, 2048, conf.bs_global)
+        prof = build_profile(w, SPEC, conf)
+        m = default_mapping(conf)
+        sim = simulate_iteration(conf, m, bw, prof, SPEC, jitter=0,
+                                 contention=0)["total"]
+        est = pipette_latency(conf, m, bw, prof, SPEC)
+        assert sim == pytest.approx(est, rel=0.10), conf
+
+
 def test_eq5_takes_slowest_chain():
     conf = Conf(2, 1, 1, 1, 1)
     prof = Profile(0.01, 0.02, 0, 0, msg_pp=10e6, msg_dp=1, stage_params=1)
@@ -112,3 +134,42 @@ def test_heterogeneity_visible_in_matrix():
     bw = true_bandwidth_matrix(SPEC)
     inter = bw[bw < SPEC.intra_bw * 0.5]
     assert inter.max() / inter.min() > 1.8   # Fig. 3-scale spread
+
+
+def test_min_group_bw_singleton_is_inf():
+    """A 1-GPU 'group' has no links: min_group_bw returns inf, and both
+    scalar and batched forms agree."""
+    from repro.core.cluster import min_group_bw_batch
+    bw = uniform_bw(SPEC)
+    assert min_group_bw(bw, [3]) == float("inf")
+    assert min_group_bw(bw, []) == float("inf")
+    batch = min_group_bw_batch(bw, np.array([[0], [5]]))
+    assert np.all(np.isinf(batch)) and batch.shape == (2,)
+
+
+def test_ring_allreduce_singleton_and_inf_guard():
+    """n == 1 early-outs to exactly 0.0 before the bandwidth is touched
+    (so a singleton min_group_bw inf is safe), while an inf/0 bandwidth
+    reaching a real ring (n > 1) raises instead of silently pricing a
+    0-second collective."""
+    bw = uniform_bw(SPEC)
+    assert ring_allreduce_time(1e9, min_group_bw(bw, [7]), 1) == 0.0
+    assert ring_allreduce_time(1e9, float("inf"), 0) == 0.0
+    with pytest.raises(ValueError, match="finite positive"):
+        ring_allreduce_time(1e9, float("inf"), 2)
+    with pytest.raises(ValueError, match="finite positive"):
+        ring_allreduce_time(1e9, 0.0, 4)
+    # finite case unchanged
+    assert ring_allreduce_time(8e7, 1e10, 4) == \
+        pytest.approx(2 * 3 / 4 * 8e7 / 1e10)
+
+
+def test_tp_scale_guards_singleton_semantics():
+    """_tp_scale/_cp_scale treat a non-finite group bandwidth as scale 1.0
+    (documented inf semantics at the call sites)."""
+    from repro.core.latency import _cp_scale, _tp_scale
+    conf = Conf(1, 1, 1, 1, 4, cp=1)
+    m = default_mapping(conf)
+    bw = uniform_bw(SPEC)
+    assert _tp_scale(conf, m, bw, SPEC, 300e9) == 1.0     # tp == 1
+    assert _cp_scale(conf, m, bw, 300e9) == 1.0           # cp == 1

@@ -1,15 +1,19 @@
 """Memory estimator (§VI): ground-truth structure, the analytical
 baseline's systematic underestimation, MLP fit quality, and config
 enumeration properties."""
-import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (MID_RANGE, Conf, Workload, analytical_estimate,
                         enumerate_confs, fit_memory_estimator,
                         ground_truth_memory, mape)
 from repro.models.config import ModelConfig
+
+# optional dep: skip the module without failing collection; assigning the
+# names (instead of `from hypothesis import ...` after a statement) keeps
+# every real import at the top of the file (ruff E402)
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hyp.given, hyp.settings
 
 
 def gpt(l, d, h, name="m"):
@@ -22,17 +26,28 @@ SPEC = MID_RANGE
 
 
 @settings(max_examples=40, deadline=None)
-@given(g_exp=st.integers(3, 7), bs_exp=st.integers(6, 9))
-def test_enumerate_confs_products(g_exp, bs_exp):
+@given(g_exp=st.integers(3, 7), bs_exp=st.integers(6, 9),
+       max_cp=st.sampled_from([1, 2, 4]))
+def test_enumerate_confs_products(g_exp, bs_exp, max_cp):
     g, bs = 2 ** g_exp, 2 ** bs_exp
-    confs = enumerate_confs(g, bs, n_layers=32)
+    confs = enumerate_confs(g, bs, n_layers=32, max_cp=max_cp, seq=2048)
     assert confs, "search space must be non-empty"
     for c in confs:
-        assert c.pp * c.tp * c.dp == g
+        assert c.pp * c.tp * c.cp * c.dp == g
         assert bs % c.dp == 0
         assert c.bs_mini % c.bs_micro == 0
+        assert c.cp <= max_cp and 2048 % c.cp == 0
+        # the strict (default) enumeration only emits valid,
+        # 1F1B-schedulable configurations (n_mb >= pp)
         assert c.valid()
-    assert len({(c.pp, c.tp, c.dp, c.bs_micro) for c in confs}) == len(confs)
+        assert c.schedulable() and c.n_mb >= c.pp
+    assert len({(c.pp, c.tp, c.cp, c.dp, c.bs_micro)
+                for c in confs}) == len(confs)
+    # the escape hatch restores the unfiltered space as a superset
+    loose = enumerate_confs(g, bs, n_layers=32, max_cp=max_cp, seq=2048,
+                            strict=False)
+    assert set(confs) <= set(loose)
+    assert all(c.n_mb < c.pp for c in set(loose) - set(confs))
 
 
 def test_analytical_systematically_underestimates():

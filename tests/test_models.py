@@ -8,7 +8,6 @@ import pytest
 
 from repro import configs
 from repro.models import model as M
-from repro.models.config import ModelConfig
 from repro.models.moe import moe_apply_local, router_topk
 from repro.models.sharding import ShardCtx
 from repro.models.frontends import vlm_patch_embeddings

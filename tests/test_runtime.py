@@ -1,7 +1,5 @@
 """Checkpointing, data pipeline, fault tolerance, straggler watchdog,
 elastic re-plan, optimizer, gradient compression."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -157,6 +155,67 @@ def test_elastic_replan_degraded_cluster():
     assert best.conf.n_gpus == 3 * 8
     m = best.mapping.reshape(-1)
     assert sorted(m.tolist()) == list(range(24))
+
+
+def test_elastic_replan_16_to_12_nodes_keeps_matching_estimator():
+    """Regression (ISSUE 3): a 16 -> 12 node shrink keeps gpu_mem and
+    gpus_per_node, so the estimator fit on the original spec stays valid
+    and must NOT be refit."""
+    from repro.core import fit_memory_estimator
+
+    cfg = ModelConfig(name="g", family="dense", n_layers=16, d_model=1024,
+                      n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+    w = Workload(cfg, 1024, 64)
+    spec = MID_RANGE.with_nodes(16)
+    est = fit_memory_estimator([w], spec, fit_nodes=2, steps=1500,
+                               residual=True)
+    assert est.fit_gpu_mem == spec.gpu_mem
+    plan = replan(w, spec, healthy_nodes=12, estimator=est,
+                  sa_seconds=0.05, sa_topk=2)
+    assert not plan.refit_estimator
+    assert plan.n_gpus == 12 * 8
+    assert plan.result.best.conf.n_gpus == 96
+
+
+def test_elastic_replan_refits_estimator_on_changed_hardware():
+    """When the replacement nodes have different per-GPU memory, the old
+    fit is invalid for the new ground truth: replan must refit instead of
+    silently reusing it."""
+    import dataclasses
+
+    from repro.core import fit_memory_estimator
+
+    cfg = ModelConfig(name="g", family="dense", n_layers=16, d_model=1024,
+                      n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+    w = Workload(cfg, 1024, 64)
+    spec = MID_RANGE.with_nodes(4)
+    est = fit_memory_estimator([w], spec, fit_nodes=1, steps=600,
+                               residual=True)
+    shrunk = dataclasses.replace(spec, gpu_mem=spec.gpu_mem / 2)
+    plan = replan(w, shrunk, healthy_nodes=3, estimator=est,
+                  sa_seconds=0.05, sa_topk=2, refit_steps=600)
+    assert plan.refit_estimator
+    assert plan.result.best is not None
+    assert plan.result.best.conf.n_gpus == 24
+
+
+def test_elastic_replan_refits_3d_estimator_for_4d_search():
+    """A 3D-fit estimator cannot score cp>1 candidates; replan(max_cp>1)
+    must refit (cp-aware) instead of crashing in predict_batch."""
+    from repro.core import fit_memory_estimator
+
+    cfg = ModelConfig(name="g", family="dense", n_layers=16, d_model=1024,
+                      n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+    w = Workload(cfg, 1024, 64)
+    spec = MID_RANGE.with_nodes(4)
+    est = fit_memory_estimator([w], spec, fit_nodes=1, steps=600,
+                               residual=True)
+    assert not est.with_cp
+    plan = replan(w, spec, healthy_nodes=3, estimator=est,
+                  sa_seconds=0.05, sa_topk=2, refit_steps=600, max_cp=2)
+    assert plan.refit_estimator
+    assert plan.result.best is not None
+    assert any(c.conf.cp > 1 for c in plan.result.ranked)
 
 
 # ---------------------------------------------------------------------------

@@ -2,13 +2,18 @@
 profile model (hypothesis)."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip, don't fail collection
-from hypothesis import given, settings, strategies as st
 
 from repro.core import MID_RANGE, Conf, Workload, build_profile
 from repro.core.simulator import (_one_f_one_b_order, default_mapping,
                                   simulate_iteration)
 from repro.models.config import ModelConfig
+
+# optional dep: skip the module without failing collection; assigning the
+# names (instead of `from hypothesis import ...` after a statement) keeps
+# every real import at the top of the file (ruff E402)
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hyp.given, hyp.settings
 
 GPT = ModelConfig(name="g", family="dense", n_layers=24, d_model=1024,
                   n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)

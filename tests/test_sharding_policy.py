@@ -4,19 +4,21 @@ this is the property the 80-cell dry-run depends on."""
 import os
 from types import SimpleNamespace
 
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.models.sharding import ShardCtx, tree_pspecs
+
 # Shape-only checks (jax.eval_shape), but force a multi-device host platform
 # anyway so the file also runs on single-device CPU runners the way
-# test_multidevice does for its subprocesses.  Must precede jax's backend
-# init, hence before the import below.
+# test_multidevice does for its subprocesses.  `import jax` does not
+# initialise the backend — XLA_FLAGS is read lazily on first device use —
+# so setting it at module (collection) time, after the imports, is early
+# enough and keeps the imports at the top of the file (ruff E402).
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import jax                                     # noqa: E402
-import pytest                                  # noqa: E402
-from jax.sharding import PartitionSpec as P    # noqa: E402
-
-from repro import configs                      # noqa: E402
-from repro.models import model as M            # noqa: E402
-from repro.models.sharding import ShardCtx, tree_pspecs   # noqa: E402
 
 
 def _flatten_with_path(tree):
