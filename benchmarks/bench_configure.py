@@ -54,6 +54,17 @@ def scalar_predict_seed(est, cfg, conf) -> float:
     return pred
 
 
+# Row names used both for printing and for the speedup computation below.
+# Keeping them as module constants (instead of free-floating strings looked
+# up in a dict at report time) means a renamed row fails loudly at
+# definition time, not as a KeyError after the benchmark already ran.
+ROW_PRUNE_SEED = "prune scalar-predict (seed)"
+ROW_PRUNE_COLD = "prune batched, cold (compile)"
+ROW_PRUNE_BATCHED = "prune batched (new)"
+ROW_PROFILES_SEED = "profiles seed (all, pre-prune)"
+ROW_PROFILES_NEW = "profiles new (survivors, memoized)"
+
+
 def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3,
                 max_cp: int = 1):
     """Enumerate+prune wall-clock, seed scalar path vs batched path.
@@ -78,14 +89,14 @@ def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3,
                 if scalar_predict_seed(est, w.cfg, c) <= limit]
         dt = time.perf_counter() - t0
         best_scalar = dt if best_scalar is None else min(best_scalar, dt)
-    yield ("prune scalar-predict (seed)", best_scalar, len(confs), len(kept))
+    yield (ROW_PRUNE_SEED, best_scalar, len(confs), len(kept))
 
     # batched path: cold call first (XLA compile), then steady state
     t0 = time.perf_counter()
     confs = enumerate_filtered()
     preds = est.predict_batch(w.cfg, confs)
     cold = time.perf_counter() - t0
-    yield ("prune batched, cold (compile)", cold, len(confs),
+    yield (ROW_PRUNE_COLD, cold, len(confs),
            int((preds <= limit).sum()))
     best_batch = None
     for _ in range(repeats):
@@ -95,20 +106,20 @@ def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3,
         kept_b = [c for c, k in zip(confs, preds <= limit) if k]
         dt = time.perf_counter() - t0
         best_batch = dt if best_batch is None else min(best_batch, dt)
-    yield ("prune batched (new)", best_batch, len(confs), len(kept_b))
+    yield (ROW_PRUNE_BATCHED, best_batch, len(confs), len(kept_b))
 
     # profile construction: seed built one per enumerated conf *before* the
     # memory check; the new pipeline builds survivors only, memoized
     t0 = time.perf_counter()
     for c in confs:
         build_profile(w, spec, c)
-    yield ("profiles seed (all, pre-prune)", time.perf_counter() - t0,
+    yield (ROW_PROFILES_SEED, time.perf_counter() - t0,
            len(confs), len(confs))
     t0 = time.perf_counter()
     cache = ProfileCache(w, spec)
     for c in kept_b:
         cache.get(c)
-    yield ("profiles new (survivors, memoized)", time.perf_counter() - t0,
+    yield (ROW_PROFILES_NEW, time.perf_counter() - t0,
            len(kept_b), len(cache._full))
 
 
@@ -157,9 +168,9 @@ def main() -> None:
                                               max_cp=args.max_cp):
         rows[name] = sec
         print(f"{name},{sec:.4f},{n_in},{n_out}")
-    speedup = rows["prune scalar-predict (seed)"] / rows["prune batched (new)"]
-    prof_speedup = (rows["profiles seed (all, pre-prune)"]
-                    / max(rows["profiles new (survivors, memoized)"], 1e-9))
+    speedup = rows[ROW_PRUNE_SEED] / rows[ROW_PRUNE_BATCHED]
+    prof_speedup = (rows[ROW_PROFILES_SEED]
+                    / max(rows[ROW_PROFILES_NEW], 1e-9))
     print(f"enumerate+prune speedup: {speedup:.1f}x")
     print(f"profile-construction speedup: {prof_speedup:.1f}x")
 
@@ -172,11 +183,13 @@ def main() -> None:
     for name, res in bench_search(w, spec, est, bw, sa_iters=sa_iters,
                                   max_micro=max_micro, sa_topk=8,
                                   max_cp=args.max_cp):
+        # typed Overhead attributes: a mistyped field is an AttributeError
+        # here, not a KeyError swallowed into a half-printed CSV row
         o = res.overhead
-        print(f"{name},{o['total_s']:.2f},{o['sa_s']:.2f},"
-              f"{o['mem_estimator_s']:.4f},{o['profile_s']:.4f},"
-              f"{o['prescore_s']:.4f},{o['n_enumerated']},"
-              f"{o['n_candidates']}")
+        print(f"{name},{o.total_s:.2f},{o.sa_s:.2f},"
+              f"{o.mem_estimator_s:.4f},{o.profile_s:.4f},"
+              f"{o.prescore_s:.4f},{o.n_enumerated},"
+              f"{o.n_candidates}")
 
     print()
     verdict = "PASS" if speedup >= 5.0 else "BELOW TARGET"

@@ -97,7 +97,7 @@ def bench_configure(nodes: int = 4, sa_iters: int = 400):
     res_fast = configure(w, spec, bw, **kw)
     fast_s = time.perf_counter() - t0
     yield ("configure() engine", fast_s, res_fast.best.latency,
-           res_fast.overhead["n_candidates"])
+           res_fast.overhead.n_candidates)
 
     def ref_objective_for(conf, prof):
         def objective(p):

@@ -190,14 +190,14 @@ def table2_overhead():
         t_iter = measure(res.best.conf, res.best.mapping, w, spec, bw_true)
         # paper's overhead metric: conf time / full 300K-iteration training
         total_train_s = t_iter * 300_000
-        conf_s = profile_cost + res.overhead["total_s"]
+        conf_s = profile_cost + res.overhead.total_s
         rows += [
             (f"table2_{cluster}_{nodes}n_profiling_s", t.us,
              f"{profile_cost:.1f}"),
             (f"table2_{cluster}_{nodes}n_sa_s", t.us,
-             f"{res.overhead['sa_s']:.1f}"),
+             f"{res.overhead.sa_s:.1f}"),
             (f"table2_{cluster}_{nodes}n_memest_s", t.us,
-             f"{res.overhead['mem_estimator_s']:.3f}"),
+             f"{res.overhead.mem_estimator_s:.3f}"),
             (f"table2_{cluster}_{nodes}n_overhead_pct", t.us,
              f"{100 * conf_s / total_train_s:.4f}"),
         ]

@@ -46,6 +46,10 @@ def main():
     print(f"[plan] degraded cluster: {best.conf} "
           f"est {best.latency*1e3:.1f} ms/iter "
           f"(mapping over {best.conf.n_gpus} GPUs)")
+    # the re-plan is a serializable artifact: persist it with the ckpt so
+    # the restarted job knows exactly what it is running
+    print(f"[plan] artifact -> "
+          f"{plan2.plan.save('checkpoints/elastic/plan.json')}")
 
     # restore + reshard (same host here; on a pod the shardings change)
     (params, state), at = mgr.restore((params, state))

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import MID_RANGE, Workload, configure, profile_bandwidth
+from repro.core import (MID_RANGE, Budget, Planner, PlanRequest,
+                        PipetteStrategy, Workload, profile_bandwidth)
 from repro.data.pipeline import DataLoader, LoaderConfig, SyntheticCorpus
 from repro.launch.steps import make_decode_step, make_train_step
 from repro.models import model as M
@@ -16,15 +17,21 @@ from repro.optim.adamw import AdamW
 
 def main():
     # 1) Pipette: pick (pp, tp, dp, bs_micro) + worker mapping for a
-    #    simulated 4-node cluster.
+    #    simulated 4-node cluster — one declarative PlanRequest through
+    #    the Planner; the Plan artifact is JSON-serializable
+    #    (`python -m repro.plan` builds the same thing from the CLI).
     cfg = configs.get("qwen2-7b").reduced()
     spec = MID_RANGE.with_nodes(4)
     w = Workload(cfg, seq=128, bs_global=64)
     bw, cost_s = profile_bandwidth(spec)
-    res = configure(w, spec, bw, sa_seconds=0.2, sa_iters=2000)
+    req = PlanRequest(workload=w, spec=spec,
+                      budget=Budget(sa_seconds=0.2, sa_iters=2000))
+    plan = Planner(PipetteStrategy()).plan(req, bw)
+    res = plan.result
     print(f"[pipette] profiled {spec.n_gpus} GPUs (~{cost_s:.0f}s on a real "
-          f"cluster); best: {res.best.conf} "
-          f"est {res.best.latency*1e3:.1f} ms/iter")
+          f"cluster); best: {plan.conf} "
+          f"est {plan.latency*1e3:.1f} ms/iter "
+          f"(strategy {plan.provenance.strategy})")
 
     # 2) Train the reduced arch on the synthetic corpus, microbatched by
     #    Pipette's bs_micro.

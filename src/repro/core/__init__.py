@@ -6,8 +6,13 @@ baselines.
 
 The search space is 4D: (pp, tp, cp, dp) with context parallelism (ring
 attention over sequence shards) as the fourth axis via
-``configure(max_cp=...)``; ``cp == 1`` reproduces the paper's 3D setting
-bit-for-bit, and the baselines deliberately stay 3D."""
+``SearchSpace(max_cp=...)``; ``cp == 1`` reproduces the paper's 3D setting
+bit-for-bit, and the baselines deliberately stay 3D.
+
+The public entry point is the Planner API (``plan.py``):
+``Planner(strategy).plan(PlanRequest(...), bw)`` returns a serializable
+:class:`~repro.core.plan.Plan` artifact; the legacy ``configure()`` kwarg
+pile remains as a bit-exact shim over ``Planner(PipetteStrategy())``."""
 
 from .cluster import (ClusterSpec, HIGH_END, MID_RANGE, TPU_POD,
                       min_group_bw, min_group_bw_batch, profile_bandwidth,
@@ -21,5 +26,9 @@ from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
                      fit_memory_estimator, ground_truth_memory, mape)
 from .dedication import (DedicationEngine, GroupIndex, SAResult, anneal,
                          anneal_multistart, perm_to_mapping)
-from .search import Candidate, SearchResult, configure
+from .search import Candidate, Overhead, SearchResult, configure, run_search
 from .baselines import amp_configure, mlm_configure, varuna_configure
+from .plan import (STRATEGIES, AMPStrategy, Budget, ExhaustiveStrategy,
+                   MegatronStrategy, Plan, Planner, PlanRequest,
+                   PipetteStrategy, Provenance, SearchSpace, Strategy,
+                   VarunaStrategy, bw_fingerprint)

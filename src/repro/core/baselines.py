@@ -5,9 +5,15 @@ All three deliberately search the 3D (pp, tp, dp) space only: none of the
 prior art models context parallelism, which is exactly the comparison point
 for Pipette's 4D search (``configure(max_cp > 1)``) on long-context
 workloads.  They do share the schedule-validity gate (``n_mb >= pp``) —
-a config 1F1B cannot fill would be rejected on any real cluster."""
+a config 1F1B cannot fill would be rejected on any real cluster.
+
+Behind the Planner API these functions are re-homed as strategies
+(:class:`~repro.core.plan.AMPStrategy`, ``VarunaStrategy``,
+``MegatronStrategy``) so all four configurators run behind the single
+``Planner(strategy).plan(request, bw)`` interface."""
 from __future__ import annotations
 
+import time
 from typing import List
 
 import numpy as np
@@ -15,7 +21,7 @@ import numpy as np
 from .cluster import ClusterSpec
 from .latency import amp_latency, varuna_latency
 from .memory import enumerate_confs, ground_truth_memory
-from .search import Candidate, SearchResult
+from .search import Candidate, Overhead, SearchResult
 from .simulator import Workload, build_profile, default_mapping, measure
 
 
@@ -32,15 +38,21 @@ def amp_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> Sea
         :class:`~repro.core.search.SearchResult` ranked by Eq. 1 latency
         (``mem_pred`` is ``nan`` — AMP does not model memory).
     """
+    t0 = time.perf_counter()
     cands = []
+    n_enum = 0
     for conf in enumerate_confs(spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers):
+        n_enum += 1
         if conf.bs_micro > max_micro:
             continue
         prof = build_profile(w, spec, conf)
         lat = amp_latency(conf, default_mapping(conf), spec, prof)
         cands.append(Candidate(conf, default_mapping(conf), lat, float("nan")))
     cands.sort(key=lambda c: c.latency)
-    return SearchResult(best=cands[0] if cands else None, ranked=cands)
+    return SearchResult(best=cands[0] if cands else None, ranked=cands,
+                        overhead=Overhead(total_s=time.perf_counter() - t0,
+                                          n_enumerated=n_enum,
+                                          n_candidates=len(cands)))
 
 
 def varuna_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> SearchResult:
@@ -55,15 +67,21 @@ def varuna_configure(w: Workload, spec: ClusterSpec, *, max_micro: int = 16) -> 
         :class:`~repro.core.search.SearchResult` ranked by the Varuna-style
         estimate (``mem_pred`` is ``nan``).
     """
+    t0 = time.perf_counter()
     cands = []
+    n_enum = 0
     for conf in enumerate_confs(spec.n_gpus, w.bs_global, n_layers=w.cfg.n_layers):
+        n_enum += 1
         if conf.tp != 1 or conf.bs_micro > max_micro:
             continue
         prof = build_profile(w, spec, conf)
         lat = varuna_latency(conf, spec, prof)
         cands.append(Candidate(conf, default_mapping(conf), lat, float("nan")))
     cands.sort(key=lambda c: c.latency)
-    return SearchResult(best=cands[0] if cands else None, ranked=cands)
+    return SearchResult(best=cands[0] if cands else None, ranked=cands,
+                        overhead=Overhead(total_s=time.perf_counter() - t0,
+                                          n_enumerated=n_enum,
+                                          n_candidates=len(cands)))
 
 
 def mlm_configure(w: Workload, spec: ClusterSpec, bw_true: np.ndarray, *,
@@ -86,10 +104,13 @@ def mlm_configure(w: Workload, spec: ClusterSpec, bw_true: np.ndarray, *,
         :class:`~repro.core.search.SearchResult` over the tried configs,
         ranked by *measured* (simulated) iteration time.
     """
+    t0 = time.perf_counter()
     tp = spec.gpus_per_node
     cands: List[Candidate] = []
+    n_enum = 0
     for conf in enumerate_confs(spec.n_gpus, w.bs_global, max_tp=tp,
                                 n_layers=w.cfg.n_layers):
+        n_enum += 1
         if conf.tp != tp or conf.bs_micro > max_micro:
             continue
         if ground_truth_memory(w, conf, spec) > spec.gpu_mem:
@@ -102,4 +123,7 @@ def mlm_configure(w: Workload, spec: ClusterSpec, bw_true: np.ndarray, *,
     for c in tried:
         c.latency = measure(c.conf, c.mapping, w, spec, bw_true, seed=seed)
     tried.sort(key=lambda c: c.latency)
-    return SearchResult(best=tried[0] if tried else None, ranked=tried)
+    return SearchResult(best=tried[0] if tried else None, ranked=tried,
+                        overhead=Overhead(total_s=time.perf_counter() - t0,
+                                          n_enumerated=n_enum,
+                                          n_candidates=len(tried)))

@@ -1,0 +1,506 @@
+"""The Planner API: declarative request -> pluggable strategy -> Plan.
+
+One search pipeline (enumerate -> memory-prune -> pre-score -> dedicate,
+Alg. 1) serves initial configuration, baseline comparison, and elastic
+re-planning — so the public API is built around three pieces:
+
+1. a **declarative request**: :class:`SearchSpace` (strategy-agnostic
+   space knobs), :class:`Budget` (SA budget), and
+   :class:`PlanRequest` (workload + cluster + space + budget + seed),
+   replacing the historical 15-kwarg ``configure()`` pile;
+2. a **pluggable strategy**: the :class:`Strategy` protocol, implemented
+   by :class:`PipetteStrategy` (the five-stage pipeline),
+   :class:`ExhaustiveStrategy` (the PPT-L ``dedicate=False`` ablation),
+   and the AMP / Varuna / Megatron-LM baselines re-homed behind the same
+   interface — ``Planner(strategy).plan(request, bw)`` is the one entry
+   point for all of them;
+3. a **serializable artifact**: :class:`Plan` — best conf + mapping +
+   latency + memory prediction, the ranked top-k, the deterministic
+   overhead counters, and provenance (bandwidth-matrix digest, estimator
+   fit provenance, seed, strategy name) — with a byte-reproducible JSON
+   round trip (:meth:`Plan.save` / :meth:`Plan.load`) consumed by
+   ``launch.mesh.mesh_from_plan``, ``runtime.elastic.replan``, and
+   ``runtime.trainer``.
+
+The legacy ``configure()`` remains as a thin, bit-exact shim over
+``Planner(PipetteStrategy())`` (see ``search.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+from dataclasses import dataclass, field
+from typing import ClassVar, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from .baselines import amp_configure, mlm_configure, varuna_configure
+from .cluster import ClusterSpec
+from .memory import MemoryEstimator
+from .search import Candidate, Overhead, SearchResult, run_search
+from .simulator import Conf, Workload
+
+PLAN_SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# the declarative request
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SearchSpace:
+    """Strategy-agnostic description of the candidate space.
+
+    Attributes:
+        max_cp: open the context-parallel axis up to this degree (1 —
+            the default — is the paper's 3D space).
+        max_tp: cap on tensor parallelism (0 = unbounded); useful to keep
+            TP groups inside a node (``spec.gpus_per_node``).
+        max_micro: skip configurations with ``bs_micro`` above this.
+        fixed_micro: restrict to one microbatch size (ablations).
+    """
+    max_cp: int = 1
+    max_tp: int = 0
+    max_micro: int = 16
+    fixed_micro: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_cp < 1:
+            raise ValueError(f"max_cp must be >= 1, got {self.max_cp}")
+        if self.max_tp < 0 or self.max_micro < 1:
+            raise ValueError("max_tp must be >= 0 and max_micro >= 1")
+
+
+@dataclass(frozen=True)
+class Budget:
+    """SA dedication budget (per candidate, split across chains).
+
+    Attributes:
+        sa_seconds / sa_iters: wall-clock / iteration caps per candidate
+            (whichever bites first; use a large ``sa_seconds`` with a small
+            ``sa_iters`` for deterministic, iteration-bound runs).
+        n_chains: independent SA restarts per candidate, best-of.
+        sa_topk: anneal only the ``k`` best pre-scored candidates; the
+            rest keep their default mapping (``None`` = anneal every
+            survivor).
+    """
+    sa_seconds: float = 1.0
+    sa_iters: int = 8_000
+    n_chains: int = 1
+    sa_topk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.sa_seconds <= 0 or self.sa_iters < 1 or self.n_chains < 1:
+            raise ValueError("sa_seconds/sa_iters/n_chains must be positive")
+
+
+@dataclass(frozen=True)
+class PlanRequest:
+    """Everything a strategy needs to produce a Plan, as one value.
+
+    Attributes:
+        workload: model config + sequence length + global batch.
+        spec: cluster description.
+        space: candidate-space knobs (:class:`SearchSpace`).
+        budget: SA budget (:class:`Budget`).
+        seed: RNG seed; given it, every strategy is deterministic (under an
+            iteration-bound budget).
+    """
+    workload: Workload
+    spec: ClusterSpec
+    space: SearchSpace = field(default_factory=SearchSpace)
+    budget: Budget = field(default_factory=Budget)
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Strategy(Protocol):
+    """A configurator: turns a :class:`PlanRequest` + bandwidth matrix into
+    a ranked :class:`~repro.core.search.SearchResult`.
+
+    ``name`` identifies the strategy in Plan provenance and CLI output.
+    """
+    name: str
+
+    def search(self, req: PlanRequest,
+               bw: np.ndarray) -> SearchResult: ...      # pragma: no cover
+
+
+@dataclass(frozen=True)
+class PipetteStrategy:
+    """The paper's five-stage pipeline (Alg. 1): enumerate -> memory-prune
+    -> profile -> pre-score -> SA worker dedication."""
+    estimator: Optional[MemoryEstimator] = None
+    mem_limit: Optional[float] = None
+    name: ClassVar[str] = "pipette"
+
+    def search(self, req: PlanRequest, bw: np.ndarray) -> SearchResult:
+        return run_search(req, bw, estimator=self.estimator,
+                          mem_limit=self.mem_limit, dedicate=True)
+
+
+@dataclass(frozen=True)
+class ExhaustiveStrategy:
+    """The PPT-L ablation: latency + memory estimators over the exhaustive
+    enumeration, identity (default) mapping — no SA dedication."""
+    estimator: Optional[MemoryEstimator] = None
+    mem_limit: Optional[float] = None
+    name: ClassVar[str] = "exhaustive"
+
+    def search(self, req: PlanRequest, bw: np.ndarray) -> SearchResult:
+        return run_search(req, bw, estimator=self.estimator,
+                          mem_limit=self.mem_limit, dedicate=False)
+
+
+@dataclass(frozen=True)
+class AMPStrategy:
+    """AMP baseline [8]: Eq. 1 latency model on nominal bandwidths,
+    memory-unaware, 3D space only (the profiled ``bw`` is ignored)."""
+    name: ClassVar[str] = "amp"
+
+    def search(self, req: PlanRequest, bw: np.ndarray) -> SearchResult:
+        return amp_configure(req.workload, req.spec,
+                             max_micro=req.space.max_micro)
+
+
+@dataclass(frozen=True)
+class VarunaStrategy:
+    """Varuna baseline [12]: pipeline + data parallelism only (tp = 1),
+    memory-unaware, 3D space only (the profiled ``bw`` is ignored)."""
+    name: ClassVar[str] = "varuna"
+
+    def search(self, req: PlanRequest, bw: np.ndarray) -> SearchResult:
+        return varuna_configure(req.workload, req.spec,
+                                max_micro=req.space.max_micro)
+
+
+@dataclass(frozen=True)
+class MegatronStrategy:
+    """Megatron-LM manual heuristic [14]: tp = gpus-per-node, then the
+    "expert" trial-runs the most promising configs on the cluster.
+
+    The trial runs execute on ``bw_true`` when given (the simulator's
+    ground-truth matrix — the paper's setting, where manual tuning runs on
+    the real cluster, not the profiled snapshot); otherwise on the ``bw``
+    handed to :meth:`search`.
+    """
+    trials: int = 6
+    bw_true: Optional[np.ndarray] = None
+    name: ClassVar[str] = "megatron-lm"
+
+    def search(self, req: PlanRequest, bw: np.ndarray) -> SearchResult:
+        return mlm_configure(req.workload, req.spec, self.scoring_bw(bw),
+                             max_micro=req.space.max_micro,
+                             trials=self.trials, seed=req.seed)
+
+    def scoring_bw(self, bw: np.ndarray) -> np.ndarray:
+        """The matrix the trial runs actually execute on — what Plan
+        provenance must fingerprint (not the ignored profiled ``bw``)."""
+        return self.bw_true if self.bw_true is not None else bw
+
+
+#: Strategy constructors by name (CLI / provenance lookup).
+STRATEGIES = {
+    "pipette": PipetteStrategy,
+    "exhaustive": ExhaustiveStrategy,
+    "amp": AMPStrategy,
+    "varuna": VarunaStrategy,
+    "megatron-lm": MegatronStrategy,
+}
+
+
+# ---------------------------------------------------------------------------
+# provenance
+# ---------------------------------------------------------------------------
+
+def bw_fingerprint(bw: np.ndarray) -> str:
+    """SHA-256 digest of a bandwidth matrix (shape + float64 bytes).
+
+    Recorded in Plan provenance so a plan can be matched against the
+    interconnect snapshot it was computed for — a re-profiled cluster
+    yields a different digest, signalling the plan may be stale.
+    """
+    a = np.ascontiguousarray(bw, np.float64)
+    h = hashlib.sha256()
+    h.update(repr(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def estimator_provenance(est: Optional[MemoryEstimator]) -> Optional[dict]:
+    """Fit provenance of a memory estimator (``None`` for memory-unaware
+    strategies): which feature space it was fit on and against which
+    hardware ground truth — the same fields
+    :func:`repro.runtime.elastic.replan` uses for staleness detection."""
+    if est is None:
+        return None
+    return {"with_cp": bool(est.with_cp),
+            "residual": bool(est.residual),
+            "soft_margin": float(est.soft_margin),
+            "workload_seq": int(est.workload_seq),
+            "fit_gpu_mem": float(est.fit_gpu_mem),
+            "fit_gpus_per_node": int(est.fit_gpus_per_node)}
+
+
+@dataclass(frozen=True)
+class Provenance:
+    """Where a Plan came from — enough to audit it without re-running.
+
+    Attributes:
+        strategy: producing strategy's ``name``.
+        seed: the request seed.
+        bw_digest: :func:`bw_fingerprint` of the profiled matrix.
+        cluster: cluster spec name; ``n_gpus`` its size at plan time.
+        model / seq / bs_global: the workload.
+        space / budget: the request's search-space and budget knobs.
+        estimator: :func:`estimator_provenance` dict, or ``None``.
+    """
+    strategy: str
+    seed: int
+    bw_digest: str
+    cluster: str
+    n_gpus: int
+    model: str
+    seq: int
+    bs_global: int
+    space: SearchSpace
+    budget: Budget
+    estimator: Optional[dict] = None
+
+
+# ---------------------------------------------------------------------------
+# the serializable Plan artifact
+# ---------------------------------------------------------------------------
+
+def _num_out(x: float):
+    """JSON-safe float: NaN -> None, inf -> "inf" (strict-JSON friendly)."""
+    x = float(x)
+    if math.isnan(x):
+        return None
+    if math.isinf(x):
+        return "inf" if x > 0 else "-inf"
+    return x
+
+
+def _num_in(x) -> float:
+    if x is None:
+        return float("nan")
+    if isinstance(x, str):
+        return float(x)
+    return float(x)
+
+
+def _conf_out(conf: Conf) -> dict:
+    return {"pp": conf.pp, "tp": conf.tp, "cp": conf.cp, "dp": conf.dp,
+            "bs_micro": conf.bs_micro, "bs_global": conf.bs_global}
+
+
+def _conf_in(d: dict) -> Conf:
+    return Conf(pp=d["pp"], tp=d["tp"], dp=d["dp"], bs_micro=d["bs_micro"],
+                bs_global=d["bs_global"], cp=d.get("cp", 1))
+
+
+def _mapping_out(mapping: np.ndarray) -> dict:
+    m = np.asarray(mapping)
+    return {"dtype": str(m.dtype), "shape": list(m.shape),
+            "data": m.reshape(-1).tolist()}
+
+
+def _mapping_in(d: dict) -> np.ndarray:
+    return np.asarray(d["data"], dtype=np.dtype(d["dtype"])) \
+        .reshape(tuple(d["shape"]))
+
+
+def _candidate_out(c: Candidate) -> dict:
+    return {"conf": _conf_out(c.conf), "mapping": _mapping_out(c.mapping),
+            "latency": _num_out(c.latency), "mem_pred": _num_out(c.mem_pred)}
+
+
+def _candidate_in(d: dict) -> Candidate:
+    return Candidate(conf=_conf_in(d["conf"]),
+                     mapping=_mapping_in(d["mapping"]),
+                     latency=_num_in(d["latency"]),
+                     mem_pred=_num_in(d["mem_pred"]))
+
+
+@dataclass(frozen=True, eq=False)
+class Plan:
+    """A serializable training-configuration plan.
+
+    The first-class artifact the launch/runtime/checkpoint layers consume:
+    the chosen parallelism configuration and worker dedication, the latency
+    and memory predictions behind the choice, the ranked top-k fallbacks,
+    the deterministic search counters, and full provenance.  ``save``/
+    ``load`` round-trip it through canonical JSON — byte-identical across
+    runs for the same request + seed (wall-clock overhead timings are
+    deliberately *not* serialized; they stay on the in-process
+    :attr:`overhead`).
+
+    Attributes:
+        conf: best configuration (``None`` when nothing survived — e.g.
+            every candidate was memory-pruned).
+        mapping: worker -> GPU dedication of the best candidate,
+            ``(pp, tp, dp)`` or ``(pp, tp, cp, dp)``.
+        latency: estimated seconds/iteration of the best candidate.
+        mem_pred: predicted peak bytes/GPU (NaN without an estimator).
+        ranked: top-k candidates, fastest first (fallbacks: e.g. step to
+            ``ranked[1]`` when the best OOMs in practice, Fig. 5b style).
+        overhead: :class:`~repro.core.search.Overhead`; only its
+            deterministic counters are serialized.
+        provenance: :class:`Provenance`.
+        result: the full in-process :class:`~repro.core.search.SearchResult`
+            (every candidate, wall-clock timings).  Not serialized —
+            ``None`` after :meth:`load`.
+    """
+    conf: Optional[Conf]
+    mapping: Optional[np.ndarray]
+    latency: float
+    mem_pred: float
+    ranked: Tuple[Candidate, ...]
+    overhead: Overhead
+    provenance: Provenance
+    result: Optional[SearchResult] = field(default=None, repr=False)
+
+    @property
+    def feasible(self) -> bool:
+        """True when the search found at least one runnable candidate."""
+        return self.conf is not None
+
+    @classmethod
+    def from_search(cls, res: SearchResult, req: PlanRequest,
+                    bw: np.ndarray, *, strategy: str,
+                    estimator: Optional[MemoryEstimator] = None,
+                    keep_top: int = 10) -> "Plan":
+        """Freeze a :class:`SearchResult` into a Plan artifact."""
+        w = req.workload
+        prov = Provenance(strategy=strategy, seed=req.seed,
+                          bw_digest=bw_fingerprint(bw),
+                          cluster=req.spec.name, n_gpus=req.spec.n_gpus,
+                          model=w.cfg.name, seq=w.seq,
+                          bs_global=w.bs_global, space=req.space,
+                          budget=req.budget,
+                          estimator=estimator_provenance(estimator))
+        best = res.best
+        return cls(conf=best.conf if best else None,
+                   mapping=(np.asarray(best.mapping).copy()
+                            if best else None),
+                   latency=best.latency if best else float("inf"),
+                   mem_pred=best.mem_pred if best else float("nan"),
+                   ranked=tuple(res.top(keep_top)),
+                   overhead=res.overhead, provenance=prov, result=res)
+
+    # -- JSON round trip ----------------------------------------------------
+
+    def to_json_dict(self) -> dict:
+        """Canonical JSON-ready dict (deterministic field content)."""
+        prov = self.provenance
+        return {
+            "version": PLAN_SCHEMA_VERSION,
+            "strategy": prov.strategy,
+            "best": (None if self.conf is None else
+                     {"conf": _conf_out(self.conf),
+                      "mapping": _mapping_out(self.mapping),
+                      "latency": _num_out(self.latency),
+                      "mem_pred": _num_out(self.mem_pred)}),
+            "ranked": [_candidate_out(c) for c in self.ranked],
+            "overhead": self.overhead.counts(),
+            "provenance": {
+                "seed": prov.seed,
+                "bw_digest": prov.bw_digest,
+                "cluster": prov.cluster,
+                "n_gpus": prov.n_gpus,
+                "model": prov.model,
+                "seq": prov.seq,
+                "bs_global": prov.bs_global,
+                "space": dataclasses.asdict(prov.space),
+                "budget": dataclasses.asdict(prov.budget),
+                "estimator": prov.estimator,
+            },
+        }
+
+    def to_json(self) -> str:
+        """Canonical JSON text: sorted keys, fixed separators, trailing
+        newline — byte-identical for identical plan content."""
+        return json.dumps(self.to_json_dict(), sort_keys=True, indent=2,
+                          allow_nan=False) + "\n"
+
+    def save(self, path) -> str:
+        """Write the canonical JSON artifact; returns the path written."""
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return str(path)
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "Plan":
+        if d.get("version") != PLAN_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported plan schema version {d.get('version')!r} "
+                f"(this build reads version {PLAN_SCHEMA_VERSION})")
+        p = d["provenance"]
+        prov = Provenance(strategy=d["strategy"], seed=p["seed"],
+                          bw_digest=p["bw_digest"], cluster=p["cluster"],
+                          n_gpus=p["n_gpus"], model=p["model"],
+                          seq=p["seq"], bs_global=p["bs_global"],
+                          space=SearchSpace(**p["space"]),
+                          budget=Budget(**p["budget"]),
+                          estimator=p["estimator"])
+        best = d["best"]
+        return cls(
+            conf=None if best is None else _conf_in(best["conf"]),
+            mapping=None if best is None else _mapping_in(best["mapping"]),
+            latency=(float("inf") if best is None
+                     else _num_in(best["latency"])),
+            mem_pred=(float("nan") if best is None
+                      else _num_in(best["mem_pred"])),
+            ranked=tuple(_candidate_in(c) for c in d["ranked"]),
+            overhead=Overhead(**d["overhead"]),
+            provenance=prov, result=None)
+
+    @classmethod
+    def load(cls, path) -> "Plan":
+        """Read a Plan back from :meth:`save` output."""
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# the one entry point
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Planner:
+    """``Planner(strategy).plan(request, bw)`` — the single configurator
+    entry point, shared by Pipette, its ablations, and every baseline.
+
+    Example:
+        >>> req = PlanRequest(w, spec, SearchSpace(max_cp=2), Budget())
+        >>> plan = Planner(PipetteStrategy(estimator=est)).plan(req, bw)
+        >>> plan.save("plan.json")          # consumed by launch/runtime
+    """
+    strategy: Strategy
+
+    def plan(self, req: PlanRequest, bw: np.ndarray, *,
+             keep_top: int = 10) -> Plan:
+        """Run the strategy and freeze its result into a :class:`Plan`.
+
+        Args:
+            req: declarative request.
+            bw: ``(G, G)`` profiled bandwidth matrix.
+            keep_top: how many ranked fallback candidates the Plan keeps
+                (the full ranking stays on ``plan.result``).
+        """
+        res = self.strategy.search(req, bw)
+        # provenance must fingerprint the matrix the strategy actually
+        # scored against (MegatronStrategy may substitute its bw_true)
+        scoring_bw = getattr(self.strategy, "scoring_bw", None)
+        return Plan.from_search(
+            res, req, scoring_bw(bw) if scoring_bw is not None else bw,
+            strategy=self.strategy.name,
+            estimator=getattr(self.strategy, "estimator", None),
+            keep_top=keep_top)

@@ -1,6 +1,8 @@
 """Algorithm 1 — the Pipette configurator, as a staged array pipeline.
 
-``configure()`` runs five batched stages instead of a per-candidate loop:
+``run_search()`` — the engine behind ``Planner(PipetteStrategy())`` and the
+legacy ``configure()`` shim — runs five batched stages instead of a
+per-candidate loop:
 
 1. **enumerate** — all (pp, tp, cp, dp, bs_micro) with ``pp*tp*cp*dp = G``
    (``cp`` up to the ``max_cp`` knob; 1 keeps the paper's 3D space), plus
@@ -27,9 +29,10 @@ DedicationEngine`; its permutation-position index tensors depend only on the
 every microbatch variant of that shape."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -39,6 +42,9 @@ from .dedication import (DedicationEngine, GroupIndex, anneal,
 from .latency import default_mapping_latencies
 from .memory import MemoryEstimator, enumerate_confs
 from .simulator import Conf, ProfileCache, Workload, default_mapping
+
+if TYPE_CHECKING:                              # pragma: no cover
+    from .plan import PlanRequest
 
 
 @dataclass
@@ -59,15 +65,50 @@ class Candidate:
 
 
 @dataclass
+class Overhead:
+    """Typed search-overhead breakdown (the paper's Table II axis).
+
+    The ``*_s`` fields are wall-clock phase timings of the staged pipeline;
+    ``n_enumerated``/``n_candidates`` are the deterministic size counters.
+    ``as_dict()`` keeps the benchmarks' JSON/CSV output format, and
+    ``__getitem__`` preserves the historical ``overhead["sa_s"]`` dict-style
+    access so existing callers keep working — but unlike the stringly-typed
+    dict, a typo in attribute access now fails loudly at the call site.
+    """
+    total_s: float = 0.0
+    sa_s: float = 0.0
+    mem_estimator_s: float = 0.0
+    enumerate_s: float = 0.0
+    profile_s: float = 0.0
+    prescore_s: float = 0.0
+    n_enumerated: int = 0
+    n_candidates: int = 0
+
+    def as_dict(self) -> dict:
+        """Plain-dict view (benchmark JSON/CSV output)."""
+        return dataclasses.asdict(self)
+
+    def counts(self) -> dict:
+        """Only the deterministic counters — what a serialized
+        :class:`~repro.core.plan.Plan` records (wall-clock timings are
+        process-local measurements, excluded so the artifact is
+        byte-reproducible)."""
+        return {"n_enumerated": self.n_enumerated,
+                "n_candidates": self.n_candidates}
+
+    def __getitem__(self, key: str):
+        return self.as_dict()[key]
+
+
+@dataclass
 class SearchResult:
-    """Ranked output of :func:`configure`.
+    """Ranked output of a configurator search (``Planner.plan`` /
+    ``configure``).
 
     Attributes:
         best: lowest-latency candidate (``None`` if nothing survived).
         ranked: all candidates, fastest first.
-        overhead: timing breakdown — ``total_s``, ``sa_s``,
-            ``mem_estimator_s``, ``enumerate_s``, ``profile_s``,
-            ``prescore_s``, ``n_enumerated``, ``n_candidates``.
+        overhead: typed timing breakdown (:class:`Overhead`).
 
     Example:
         >>> res = configure(w, spec, bw, sa_seconds=0.2)
@@ -78,27 +119,30 @@ class SearchResult:
     """
     best: Optional[Candidate]
     ranked: List[Candidate]
-    overhead: dict = field(default_factory=dict)
+    overhead: Overhead = field(default_factory=Overhead)
 
     def top(self, k: int = 10) -> List[Candidate]:
         """First ``k`` candidates by estimated latency (fastest first)."""
         return self.ranked[:k]
 
 
-def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
-              estimator: Optional[MemoryEstimator] = None,
-              mem_limit: Optional[float] = None,
-              sa_seconds: float = 1.0, sa_iters: int = 8_000,
-              n_chains: int = 1, sa_topk: Optional[int] = None,
-              max_micro: int = 16, fixed_micro: Optional[int] = None,
-              max_cp: int = 1, max_tp: int = 0,
-              seed: int = 0,
-              dedicate: bool = True) -> SearchResult:
-    """Pipette (Algorithm 1): enumerate -> memory-prune -> dedicate -> rank.
+def run_search(req: "PlanRequest", bw: np.ndarray, *,
+               estimator: Optional[MemoryEstimator] = None,
+               mem_limit: Optional[float] = None,
+               dedicate: bool = True) -> SearchResult:
+    """Pipette (Algorithm 1) over a declarative :class:`~repro.core.plan.
+    PlanRequest`: enumerate -> memory-prune -> profile -> pre-score ->
+    dedicate -> rank.
+
+    This is the engine behind both :class:`~repro.core.plan.PipetteStrategy`
+    (``dedicate=True``) and :class:`~repro.core.plan.ExhaustiveStrategy`
+    (``dedicate=False``, the PPT-L ablation).  The legacy kwarg entry point
+    :func:`configure` is a thin, bit-exact shim over it.
 
     Args:
-        w: workload (model config, sequence length, global batch).
-        spec: cluster description.
+        req: declarative request — workload, cluster spec, search space
+            (``max_cp``/``max_tp``/``max_micro``/``fixed_micro``), budget
+            (``sa_seconds``/``sa_iters``/``n_chains``/``sa_topk``), seed.
         bw: ``(G, G)`` profiled bandwidth matrix from
             :func:`~repro.core.cluster.profile_bandwidth`.
         estimator: optional MLP memory estimator; prunes configs predicted
@@ -106,39 +150,31 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
             the whole enumeration).  Must have been fit with
             ``max_cp > 1`` (:func:`~repro.core.memory.fit_memory_estimator`)
             to score a 4D search.
-        mem_limit: per-GPU memory budget in bytes (default ``spec.gpu_mem``).
-        sa_seconds / sa_iters: total SA budget per candidate (split across
-            chains when ``n_chains > 1``).
-        n_chains: independent SA restarts per candidate, best-of
-            (see :func:`~repro.core.dedication.anneal_multistart`).
-        sa_topk: anneal only the ``k`` candidates with the best
-            default-mapping latency; the rest keep the default mapping.
-            ``None`` (default) anneals every survivor — the pre-knob
-            exhaustive behaviour.
-        max_micro: skip configurations with ``bs_micro`` above this.
-        fixed_micro: restrict to one microbatch size (ablations).
-        max_cp: open the context-parallel axis up to this degree (1 —
-            the default — is the paper's 3D space, bit-exact with the
-            pre-4D pipeline).
-        max_tp: optional cap on tensor parallelism (0 = unbounded); useful
-            to keep TP groups inside a node (``spec.gpus_per_node``).
-        seed: RNG seed; the whole search is deterministic given it.
+        mem_limit: per-GPU memory budget in bytes (default
+            ``req.spec.gpu_mem``).
         dedicate: ``False`` gives the PPT-L ablation (latency+memory
             estimators only, identity mapping).
 
     Returns:
         :class:`SearchResult` with the best candidate and the full ranking.
     """
+    w, spec, space, budget = req.workload, req.spec, req.space, req.budget
+    sa_seconds, sa_iters = budget.sa_seconds, budget.sa_iters
+    n_chains, sa_topk = budget.n_chains, budget.sa_topk
+    seed = req.seed
+
     t0 = time.perf_counter()
     mem_limit = mem_limit if mem_limit is not None else spec.gpu_mem
 
     # stage 1: enumerate the whole search space up front
     confs = [conf for conf in enumerate_confs(spec.n_gpus, w.bs_global,
                                               n_layers=w.cfg.n_layers,
-                                              max_cp=max_cp, max_tp=max_tp,
+                                              max_cp=space.max_cp,
+                                              max_tp=space.max_tp,
                                               seq=w.seq)
-             if conf.bs_micro <= max_micro
-             and (fixed_micro is None or conf.bs_micro == fixed_micro)]
+             if conf.bs_micro <= space.max_micro
+             and (space.fixed_micro is None
+                  or conf.bs_micro == space.fixed_micro)]
     enum_s = time.perf_counter() - t0
 
     # stage 2: batched memory pruning — one jitted forward for all confs
@@ -207,9 +243,61 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
     return SearchResult(
         best=cands[0] if cands else None,
         ranked=cands,
-        overhead={"total_s": time.perf_counter() - t0,
-                  "sa_s": sa_time, "mem_estimator_s": mem_time,
-                  "enumerate_s": enum_s, "profile_s": profile_s,
-                  "prescore_s": prescore_s,
-                  "n_enumerated": len(confs),
-                  "n_candidates": len(cands)})
+        overhead=Overhead(total_s=time.perf_counter() - t0,
+                          sa_s=sa_time, mem_estimator_s=mem_time,
+                          enumerate_s=enum_s, profile_s=profile_s,
+                          prescore_s=prescore_s,
+                          n_enumerated=len(confs),
+                          n_candidates=len(cands)))
+
+
+def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
+              estimator: Optional[MemoryEstimator] = None,
+              mem_limit: Optional[float] = None,
+              sa_seconds: float = 1.0, sa_iters: int = 8_000,
+              n_chains: int = 1, sa_topk: Optional[int] = None,
+              max_micro: int = 16, fixed_micro: Optional[int] = None,
+              max_cp: int = 1, max_tp: int = 0,
+              seed: int = 0,
+              dedicate: bool = True) -> SearchResult:
+    """Legacy kwarg entry point — a thin shim over the Planner API.
+
+    Packs the kwarg pile into a declarative
+    :class:`~repro.core.plan.PlanRequest` and runs it through
+    ``Planner(PipetteStrategy(...))`` (or ``ExhaustiveStrategy`` when
+    ``dedicate=False``).  Bit-exact with calling the Planner directly —
+    same best conf, mapping, latency, and full ranking (enforced by
+    ``tests/test_planner_api.py``) — so every historical caller keeps
+    working unchanged.
+
+    Args:
+        w: workload (model config, sequence length, global batch).
+        spec: cluster description.
+        bw: ``(G, G)`` profiled bandwidth matrix.
+        estimator / mem_limit: memory-pruning inputs (see
+            :func:`run_search`).
+        sa_seconds / sa_iters / n_chains / sa_topk: SA budget
+            (:class:`~repro.core.plan.Budget`).
+        max_micro / fixed_micro / max_cp / max_tp: search-space knobs
+            (:class:`~repro.core.plan.SearchSpace`).
+        seed: RNG seed; the whole search is deterministic given it.
+        dedicate: ``False`` gives the PPT-L ablation (identity mapping).
+
+    Returns:
+        The full :class:`SearchResult` (the Planner's in-process view;
+        use the Planner directly to get the serializable ``Plan``).
+    """
+    from .plan import (Budget, ExhaustiveStrategy, Planner, PlanRequest,
+                       PipetteStrategy, SearchSpace)
+    req = PlanRequest(
+        workload=w, spec=spec,
+        space=SearchSpace(max_cp=max_cp, max_tp=max_tp, max_micro=max_micro,
+                          fixed_micro=fixed_micro),
+        budget=Budget(sa_seconds=sa_seconds, sa_iters=sa_iters,
+                      n_chains=n_chains, sa_topk=sa_topk),
+        seed=seed)
+    strategy = (PipetteStrategy(estimator=estimator, mem_limit=mem_limit)
+                if dedicate
+                else ExhaustiveStrategy(estimator=estimator,
+                                        mem_limit=mem_limit))
+    return Planner(strategy).plan(req, bw).result

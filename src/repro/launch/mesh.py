@@ -51,3 +51,23 @@ def mesh_from_mapping(conf, mapping: np.ndarray, axes=None):
             else ("pipe", "model", "data")
     devs = np.array(jax.devices())[:conf.n_gpus]
     return jax.sharding.Mesh(devs[mapping], tuple(axes))
+
+
+def mesh_from_plan(plan, axes=None):
+    """Build the training Mesh a serialized configurator Plan prescribes —
+    no re-search: ``Plan.load(path)`` then this is the whole launch path.
+
+    Args:
+        plan: a :class:`~repro.core.plan.Plan` (fresh from ``Planner.plan``
+            or reloaded via ``Plan.load``).
+        axes: optional axis names, forwarded to :func:`mesh_from_mapping`.
+
+    Raises:
+        ValueError: the plan is infeasible (its search found no runnable
+            configuration, so there is nothing to build).
+    """
+    if plan.conf is None:
+        raise ValueError(
+            f"plan is infeasible (strategy {plan.provenance.strategy!r} "
+            f"found no runnable configuration); nothing to build")
+    return mesh_from_mapping(plan.conf, plan.mapping, axes=axes)

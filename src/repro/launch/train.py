@@ -40,7 +40,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from .. import configs
-    from ..core import (MID_RANGE, Workload, configure, profile_bandwidth)
+    from ..core import (MID_RANGE, Budget, Planner, PlanRequest,
+                        PipetteStrategy, Workload, profile_bandwidth)
     from ..data.pipeline import DataLoader, LoaderConfig, SyntheticCorpus
     from ..models import model as M
     from ..models.sharding import ShardCtx
@@ -52,16 +53,19 @@ def main(argv=None):
     if args.smoke:
         cfg = cfg.reduced()
 
+    plan = None
     if args.configure:
         spec = MID_RANGE.with_nodes(8)
         w = Workload(cfg, args.seq_len, max(args.global_batch, 64))
         bw, cost = profile_bandwidth(spec)
-        res = configure(w, spec, bw, sa_seconds=0.2, sa_iters=2000)
-        best = res.best
+        req = PlanRequest(workload=w, spec=spec,
+                          budget=Budget(sa_seconds=0.2, sa_iters=2000),
+                          seed=args.seed)
+        plan = Planner(PipetteStrategy()).plan(req, bw)
         print(f"[pipette] profiled {spec.n_gpus} GPUs in {cost:.0f}s (sim); "
-              f"best config {best.conf} est {best.latency*1e3:.1f} ms/iter")
+              f"best config {plan.conf} est {plan.latency*1e3:.1f} ms/iter")
         print(f"[pipette] worker dedication (stage-major GPU ids):\n"
-              f"{best.mapping.reshape(best.conf.pp, -1)}")
+              f"{plan.mapping.reshape(plan.conf.pp, -1)}")
 
     ctx = ShardCtx()         # single-host CPU training
     key = jax.random.PRNGKey(args.seed)
@@ -81,7 +85,7 @@ def main(argv=None):
     loop = TrainLoop(
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         ckpt_dir=args.ckpt_dir, metrics_path=args.metrics),
-        step_fn, loader, fail_at_step=args.fail_at)
+        step_fn, loader, fail_at_step=args.fail_at, plan=plan)
     t0 = time.time()
     params, opt_state = loop.run(params, opt_state, resume=args.resume)
     dt = time.time() - t0

@@ -1,0 +1,183 @@
+"""Plan CLI: build and inspect serializable configurator Plan artifacts.
+
+    # search a named model config on a simulated cluster, write the Plan
+    python -m repro.plan plan --config qwen2-7b --reduced \
+        --cluster mid-range --nodes 2 --seq 128 --bs-global 64 \
+        -o plan.json
+
+    # pretty-print a saved Plan (no search, no JAX compile)
+    python -m repro.plan show plan.json
+
+The emitted JSON is the same artifact ``Planner.plan`` produces in
+process: byte-reproducible for a fixed request + seed (use ``--sa-iters``
+with the default large ``--sa-seconds`` cap for iteration-bound,
+deterministic SA), and consumable by ``launch.mesh.mesh_from_plan`` /
+``runtime.trainer.TrainLoop(plan=...)`` without re-running the search.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+from repro import configs
+from repro.core import (HIGH_END, MID_RANGE, STRATEGIES, TPU_POD, Budget,
+                        ExhaustiveStrategy, MegatronStrategy, Plan, Planner,
+                        PlanRequest, PipetteStrategy, SearchSpace, Workload,
+                        fit_memory_estimator, profile_bandwidth,
+                        true_bandwidth_matrix)
+
+CLUSTERS = {"mid-range": MID_RANGE, "high-end": HIGH_END,
+            "tpu-pod": TPU_POD}
+
+
+def _fmt_bytes(x: float) -> str:
+    return "-" if (x is None or math.isnan(x)) else f"{x / 1e9:.2f} GB"
+
+
+def _fmt_ms(x: float) -> str:
+    return "-" if (x is None or math.isinf(x)) else f"{x * 1e3:.2f} ms"
+
+
+def cmd_plan(args: argparse.Namespace) -> int:
+    cfg = configs.get(args.config)
+    if args.reduced:
+        cfg = cfg.reduced()
+    spec = CLUSTERS[args.cluster]
+    if args.nodes:
+        spec = spec.with_nodes(args.nodes)
+    w = Workload(cfg, args.seq, args.bs_global)
+    bw, cost_s = profile_bandwidth(spec)
+    print(f"[profile] {spec.name}: {spec.n_gpus} GPUs "
+          f"(~{cost_s:.0f}s on a real cluster)", file=sys.stderr)
+
+    estimator = None
+    if args.fit_estimator:
+        estimator = fit_memory_estimator(
+            [w], spec, fit_nodes=min(2, spec.n_nodes),
+            steps=args.fit_estimator, residual=True, max_cp=args.max_cp)
+        print(f"[memest] MLP fit on <=2-node profiles "
+              f"({args.fit_estimator} steps)", file=sys.stderr)
+
+    # one registry (repro.core.plan.STRATEGIES) drives both the CLI
+    # choices and the dispatch — only construction args differ per kind
+    cls = STRATEGIES[args.strategy]
+    if cls in (PipetteStrategy, ExhaustiveStrategy):
+        strategy = cls(estimator=estimator, mem_limit=spec.gpu_mem)
+    elif cls is MegatronStrategy:
+        # megatron-lm: trial runs happen on the ground-truth links
+        strategy = cls(bw_true=true_bandwidth_matrix(spec))
+    else:
+        strategy = cls()
+
+    req = PlanRequest(
+        workload=w, spec=spec,
+        space=SearchSpace(max_cp=args.max_cp, max_tp=args.max_tp,
+                          max_micro=args.max_micro),
+        budget=Budget(sa_seconds=args.sa_seconds, sa_iters=args.sa_iters,
+                      sa_topk=args.sa_topk),
+        seed=args.seed)
+    plan = Planner(strategy).plan(req, bw, keep_top=args.topk)
+    if not plan.feasible:
+        print(f"[plan] INFEASIBLE: {strategy.name} found no runnable "
+              f"configuration for {spec.n_gpus} GPUs", file=sys.stderr)
+        plan.save(args.output)      # still record the (empty) outcome
+        return 1
+    print(f"[plan] {strategy.name}: best {plan.conf} "
+          f"est {_fmt_ms(plan.latency)}/iter "
+          f"mem {_fmt_bytes(plan.mem_pred)}", file=sys.stderr)
+    print(plan.save(args.output))
+    return 0
+
+
+def cmd_show(args: argparse.Namespace) -> int:
+    plan = Plan.load(args.path)
+    p = plan.provenance
+    print(f"plan: strategy={p.strategy} seed={p.seed}")
+    print(f"workload: {p.model} seq={p.seq} bs_global={p.bs_global}")
+    print(f"cluster: {p.cluster} ({p.n_gpus} GPUs) "
+          f"bw sha256:{p.bw_digest[:16]}…")
+    print(f"space: max_cp={p.space.max_cp} max_tp={p.space.max_tp} "
+          f"max_micro={p.space.max_micro} fixed_micro={p.space.fixed_micro}")
+    print(f"budget: sa_seconds={p.budget.sa_seconds} "
+          f"sa_iters={p.budget.sa_iters} n_chains={p.budget.n_chains} "
+          f"sa_topk={p.budget.sa_topk}")
+    if p.estimator is None:
+        print("estimator: none (memory-unaware)")
+    else:
+        e = p.estimator
+        print(f"estimator: with_cp={e['with_cp']} residual={e['residual']} "
+              f"fit_gpu_mem={e['fit_gpu_mem'] / 1e9:.0f}GB "
+              f"fit_gpus_per_node={e['fit_gpus_per_node']}")
+    o = plan.overhead
+    print(f"search: {o.n_enumerated} enumerated -> "
+          f"{o.n_candidates} candidates")
+    if not plan.feasible:
+        print("result: INFEASIBLE — no runnable configuration")
+        return 1
+    print(f"\nbest: {plan.conf}  est {_fmt_ms(plan.latency)}/iter  "
+          f"mem {_fmt_bytes(plan.mem_pred)}")
+    print("mapping (stages x workers/stage):")
+    print(plan.mapping.reshape(plan.conf.pp, -1))
+    print(f"\n{'#':>3s} {'config':30s} {'est/iter':>10s} {'mem':>10s}")
+    for i, c in enumerate(plan.ranked):
+        print(f"{i + 1:3d} {str(c.conf):30s} {_fmt_ms(c.latency):>10s} "
+              f"{_fmt_bytes(c.mem_pred):>10s}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plan",
+        description="Build / inspect serializable configurator plans.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="run a strategy, write a Plan JSON")
+    p.add_argument("--config", required=True,
+                   help="model config name (repro.configs registry)")
+    p.add_argument("--reduced", action="store_true",
+                   help="use the tiny same-family smoke config")
+    p.add_argument("--cluster", choices=sorted(CLUSTERS),
+                   default="mid-range")
+    p.add_argument("--nodes", type=int, default=0,
+                   help="override the cluster's node count")
+    p.add_argument("--seq", type=int, default=2048)
+    p.add_argument("--bs-global", type=int, default=256)
+    p.add_argument("--strategy", default="pipette",
+                   choices=sorted(STRATEGIES))
+    p.add_argument("--max-cp", type=int, default=1)
+    p.add_argument("--max-tp", type=int, default=0)
+    p.add_argument("--max-micro", type=int, default=16)
+    p.add_argument("--sa-seconds", type=float, default=60.0,
+                   help="SA wall-clock cap per candidate (default large "
+                        "so --sa-iters bounds it deterministically)")
+    p.add_argument("--sa-iters", type=int, default=2000)
+    p.add_argument("--sa-topk", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--topk", type=int, default=10,
+                   help="ranked fallback candidates kept in the artifact")
+    p.add_argument("--fit-estimator", type=int, default=0, metavar="STEPS",
+                   help="fit the MLP memory estimator first (0 = skip; "
+                        "memory-unaware search)")
+    p.add_argument("-o", "--output", default="plan.json")
+    p.set_defaults(fn=cmd_plan)
+
+    s = sub.add_parser("show", help="pretty-print a saved Plan JSON")
+    s.add_argument("path")
+    s.set_defaults(fn=cmd_show)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:
+        # stdout went away (e.g. `... | head`); exit quietly like a
+        # well-behaved unix tool instead of tracebacking
+        try:
+            sys.stdout.close()
+        except Exception:
+            pass
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,9 +3,13 @@ capacity change), re-run the Pipette search for the new G, rebuild the
 mesh with the new worker dedication, and reshard the checkpoint.
 
 This is the paper's configurator promoted to a *runtime* fault-tolerance
-mechanism: the same Algorithm 1 that picked the initial configuration
-re-plans after topology changes, and the same latency estimator scores
-candidate mappings against the re-profiled bandwidth matrix.
+mechanism, expressed through the Planner API: ``replan`` shrinks the spec
+to the healthy node count, re-profiles the interconnect, validates (and if
+stale, refits) the memory estimator, then runs
+``Planner(PipetteStrategy(...)).plan(request, bw)`` — the same entry point
+that produced the initial configuration — and hands the resulting
+serializable :class:`~repro.core.plan.Plan` to
+``launch.mesh.mesh_from_plan`` / the checkpoint reshard.
 """
 from __future__ import annotations
 
@@ -16,16 +20,25 @@ import numpy as np
 
 from ..core.cluster import ClusterSpec, profile_bandwidth
 from ..core.memory import MemoryEstimator, fit_memory_estimator
-from ..core.search import SearchResult, configure
+from ..core.plan import (Budget, ExhaustiveStrategy, Plan, Planner,
+                         PlanRequest, PipetteStrategy, SearchSpace)
+from ..core.search import SearchResult
 from ..core.simulator import Workload
 
 
 @dataclass
 class ElasticPlan:
+    """Outcome of a re-plan: the serializable Plan plus re-profile context.
+
+    ``result`` (the full in-process :class:`SearchResult`) is kept for
+    callers that inspect the complete ranking; ``plan`` is the artifact the
+    launch layer consumes (``plan.save`` to persist it with the
+    checkpoint)."""
     result: SearchResult
     n_gpus: int
     bw: np.ndarray
     refit_estimator: bool = False
+    plan: Optional[Plan] = None
 
 
 def _estimator_stale(est: MemoryEstimator, spec: ClusterSpec,
@@ -50,32 +63,54 @@ def _estimator_stale(est: MemoryEstimator, spec: ClusterSpec,
 def replan(w: Workload, spec: ClusterSpec, healthy_nodes: int, *,
            estimator: Optional[MemoryEstimator] = None,
            sa_seconds: float = 0.5, seed: int = 0,
-           refit_steps: int = 2_000, **configure_kw) -> ElasticPlan:
+           refit_steps: int = 2_000, mem_limit: Optional[float] = None,
+           dedicate: bool = True, **search_kw) -> ElasticPlan:
     """Re-plan for a degraded/grown cluster of ``healthy_nodes`` nodes.
 
-    Steps: re-profile the (changed) interconnect, validate the memory
-    estimator against the new hardware (refit on ``refit_steps`` training
-    steps when ``gpu_mem`` or ``gpus_per_node`` changed — a fit from the
-    original spec would silently mis-predict peaks on different GPUs),
-    re-run Algorithm 1 on the new GPU count, and return the plan whose
-    mapping the runtime feeds to ``launch.mesh.mesh_from_mapping`` before
-    restoring the checkpoint with the new partition specs.
+    Steps: shrink the spec to the healthy node count and re-profile the
+    (changed) interconnect; validate the memory estimator against the new
+    hardware (refit on ``refit_steps`` training steps when ``gpu_mem`` or
+    ``gpus_per_node`` changed — a fit from the original spec would silently
+    mis-predict peaks on different GPUs); then run
+    ``Planner(PipetteStrategy()).plan`` on the new GPU count.  The returned
+    :class:`ElasticPlan` carries the serializable Plan whose mapping the
+    runtime feeds to ``launch.mesh.mesh_from_plan`` before restoring the
+    checkpoint with the new partition specs.
 
-    Extra keyword arguments are forwarded to
-    :func:`~repro.core.search.configure` (e.g. ``sa_topk``, ``max_cp``)."""
+    Extra keyword arguments are the declarative-request knobs: search-space
+    keys (``max_cp``, ``max_tp``, ``max_micro``, ``fixed_micro``) and
+    budget keys (``sa_iters``, ``n_chains``, ``sa_topk``); anything else
+    raises ``TypeError``."""
     new_spec = spec.with_nodes(healthy_nodes)
     bw, _ = profile_bandwidth(new_spec)
+    # split the kwargs by destination dataclass; defaults live only on
+    # SearchSpace/Budget themselves (never re-stated here)
+    space = SearchSpace(**{k: search_kw.pop(k)
+                           for k in ("max_cp", "max_tp", "max_micro",
+                                     "fixed_micro") if k in search_kw})
+    budget = Budget(sa_seconds=sa_seconds,
+                    **{k: search_kw.pop(k)
+                       for k in ("sa_iters", "n_chains", "sa_topk")
+                       if k in search_kw})
+    if search_kw:
+        raise TypeError(f"unknown replan() keywords: {sorted(search_kw)}")
     refit = estimator is not None and _estimator_stale(
-        estimator, new_spec, configure_kw.get("max_cp", 1))
+        estimator, new_spec, space.max_cp)
     if refit:
         estimator = fit_memory_estimator(
             [w], new_spec, fit_nodes=min(2, healthy_nodes),
             steps=refit_steps, residual=estimator.residual,
-            max_cp=configure_kw.get("max_cp", 1))
-    res = configure(w, new_spec, bw, estimator=estimator,
-                    sa_seconds=sa_seconds, seed=seed, **configure_kw)
-    if res.best is None:
+            max_cp=space.max_cp)
+    req = PlanRequest(workload=w, spec=new_spec, space=space, budget=budget,
+                      seed=seed)
+    strategy = (PipetteStrategy(estimator=estimator, mem_limit=mem_limit)
+                if dedicate
+                else ExhaustiveStrategy(estimator=estimator,
+                                        mem_limit=mem_limit))
+    plan = Planner(strategy).plan(req, bw)
+    if not plan.feasible:
         raise RuntimeError(
             f"no feasible configuration for {new_spec.n_gpus} GPUs — "
             f"memory limit too tight for every (pp, tp, cp, dp, bs_micro)")
-    return ElasticPlan(res, new_spec.n_gpus, bw, refit_estimator=refit)
+    return ElasticPlan(plan.result, new_spec.n_gpus, bw,
+                       refit_estimator=refit, plan=plan)

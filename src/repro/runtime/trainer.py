@@ -9,17 +9,25 @@ Production behaviours, exercised by the integration tests:
     dedication; here the hook is injectable for tests);
   * failure injection for tests (raise mid-run, restart, verify losses
     continue bitwise);
-  * elastic re-plan — on device-count change, ask Pipette for a new Conf
-    and reshard the checkpoint (runtime/elastic.py).
+  * elastic re-plan — on device-count change, ask Pipette for a new Plan
+    and reshard the checkpoint (runtime/elastic.py);
+  * plan provenance — a :class:`~repro.core.plan.Plan` handed to the loop
+    is persisted as ``plan.json`` next to the checkpoints, so a restarted
+    (or post-mortem'd) run knows exactly which configuration, worker
+    dedication, strategy, and bandwidth snapshot it was launched under.
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 from ..checkpoint.manager import CheckpointManager
+
+if TYPE_CHECKING:                              # pragma: no cover
+    from ..core.plan import Plan
 
 
 @dataclass
@@ -63,17 +71,30 @@ class TrainLoopConfig:
 class TrainLoop:
     def __init__(self, cfg: TrainLoopConfig, step_fn, loader,
                  watchdog: Optional[StragglerWatchdog] = None,
-                 fail_at_step: Optional[int] = None):
-        """step_fn(params, opt_state, batch) -> (params, opt_state, metrics)"""
+                 fail_at_step: Optional[int] = None,
+                 plan: Optional["Plan"] = None):
+        """step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+
+        ``plan``: the serialized configurator decision this run executes
+        (from ``Planner.plan`` or ``Plan.load``).  Persisted to
+        ``<ckpt_dir>/plan.json`` on ``run()`` so restarts and audits see
+        the same artifact the launcher consumed."""
         self.cfg = cfg
         self.step_fn = step_fn
         self.loader = loader
         self.watchdog = watchdog or StragglerWatchdog()
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
         self.fail_at_step = fail_at_step
+        self.plan = plan
         self.history: list = []
 
+    def plan_path(self) -> str:
+        return os.path.join(str(self.cfg.ckpt_dir), "plan.json")
+
     def run(self, params, opt_state, *, resume: bool = True):
+        if self.plan is not None:
+            os.makedirs(str(self.cfg.ckpt_dir), exist_ok=True)
+            self.plan.save(self.plan_path())
         start = 0
         if resume:
             latest = self.ckpt.latest_step()
