@@ -20,6 +20,12 @@ grows by the cp divisors of the sequence length, and the same batched
 pipeline absorbs the larger candidate set — the point of ISSUE 3.  The
 benchmark prints the 3D vs 4D candidate counts alongside the timings.
 
+``--mixed-tier`` switches the cluster to the seeded mixed A100/V100 fleet
+and appends Phase C: compute-aware vs compute-blind SA dedication of the
+same configuration on the 16-node mixed fleet, both played back in the
+discrete-event simulator at each rank's true speed — the heterogeneous-
+compute headline (aware must be strictly faster).
+
 Acceptance target (ISSUE 2): >= 5x on the enumerate+prune phase.
 """
 from __future__ import annotations
@@ -29,12 +35,17 @@ import time
 
 import numpy as np
 
-from repro.core import (MID_RANGE, ProfileCache, Workload, build_profile,
-                        configure, enumerate_confs, fit_memory_estimator,
+from repro.core import (MID_RANGE, ProfileCache, Workload,
+                        anneal_multistart, build_profile, configure,
+                        enumerate_confs, fit_memory_estimator,
                         true_bandwidth_matrix)
+from repro.core.cluster import (A100_TIER, V100_TIER, mixed_fleet_spec,
+                                profile_bandwidth)
 from repro.core.memory import _features, analytical_estimate
 from repro.core.mlp import mlp_forward
+from repro.core.simulator import Conf, default_mapping, measure
 from repro.configs.gpt_paper import GPT_3_1B
+from repro.models.config import ModelConfig
 
 SEQ = 2048
 BS_GLOBAL = 256
@@ -71,8 +82,10 @@ def bench_prune(w, spec, est, *, max_micro: int = 16, repeats: int = 3,
 
     Yields ``(name, seconds, n_in, n_out)`` rows; the batched row is
     steady-state (first call pays the one-off XLA compile, reported as its
-    own row)."""
-    limit = spec.gpu_mem * est.soft_margin
+    own row).  The limit matches what ``run_search`` budgets — the
+    tightest device tier (``mem_floor``; == ``gpu_mem`` when homogeneous),
+    so the --mixed-tier survivor counts mirror the real pipeline's."""
+    limit = spec.mem_floor * est.soft_margin
 
     def enumerate_filtered():
         return [c for c in enumerate_confs(spec.n_gpus, w.bs_global,
@@ -134,6 +147,46 @@ def bench_search(w, spec, est, bw, *, sa_iters: int, max_micro: int,
            configure(w, spec, bw, sa_topk=sa_topk, **kw))
 
 
+def bench_hetero_dedication(*, quick: bool):
+    """Phase C: compute-aware vs compute-blind dedication on the seeded
+    mixed A100/V100 16-node (single-GPU nodes) scenario, both simulated at
+    true per-rank speed.  Prints the simulated latencies and a PASS /
+    REGRESSION verdict (aware must be strictly faster than blind)."""
+    gpt12 = ModelConfig(name="g12", family="dense", n_layers=12,
+                        d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+                        vocab_size=32000)
+    spec = mixed_fleet_spec("mixed-a100-v100-16x1", 16,
+                            (A100_TIER, V100_TIER), (0.5, 0.5),
+                            gpus_per_node=1, seed=47)
+    w = Workload(gpt12, 2048, 32)
+    conf = Conf(8, 1, 2, 2, 32)         # 4 heavy + 4 light (1-layer) stages
+    bw, _ = profile_bandwidth(spec)
+    bw_true = true_bandwidth_matrix(spec)
+    prof = build_profile(w, spec, conf)
+    iters = 10_000 if quick else 40_000
+    kw = dict(n_chains=4, time_limit_s=60.0, max_iters=iters, seed=0)
+    t0 = time.perf_counter()
+    aware = anneal_multistart(conf, bw, prof, spec, **kw)
+    blind = anneal_multistart(conf, bw, prof, spec, compute_aware=False,
+                              **kw)
+    wall = time.perf_counter() - t0
+    sim_aware = measure(conf, aware.mapping, w, spec, bw_true, seed=1)
+    sim_blind = measure(conf, blind.mapping, w, spec, bw_true, seed=1)
+    sim_default = measure(conf, default_mapping(conf), w, spec, bw_true,
+                          seed=1)
+    print()
+    print(f"# phase C: hetero dedication on {spec.name} "
+          f"({conf}, {iters} SA iters x2, {wall:.1f}s)")
+    print("mapping,sim_latency_s")
+    print(f"compute-aware SA,{sim_aware:.6f}")
+    print(f"compute-blind SA,{sim_blind:.6f}")
+    print(f"default (node-major),{sim_default:.6f}")
+    gain = (1 - sim_aware / sim_blind) * 100
+    verdict = "PASS" if sim_aware < sim_blind else "REGRESSION"
+    print(f"compute-aware vs blind: {gain:+.1f}% simulated ({verdict})")
+    return sim_aware < sim_blind
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=16,
@@ -143,9 +196,18 @@ def main() -> None:
     ap.add_argument("--max-cp", type=int, default=1,
                     help="open the 4D context-parallel axis up to this "
                          "degree (default 1 = the 3D space)")
+    ap.add_argument("--mixed-tier", action="store_true",
+                    help="run on the seeded mixed A100/V100 fleet and "
+                         "report compute-aware vs compute-blind dedication")
     args = ap.parse_args()
 
-    spec = MID_RANGE.with_nodes(args.nodes)
+    if args.mixed_tier:
+        spec = mixed_fleet_spec("mixed-a100-v100", args.nodes,
+                                (A100_TIER, V100_TIER), (0.5, 0.5),
+                                gpus_per_node=8, intra_bw=300e9,
+                                inter_bw=12.5e9, seed=47)
+    else:
+        spec = MID_RANGE.with_nodes(args.nodes)
     w = Workload(GPT_3_1B, SEQ, BS_GLOBAL)
     steps = 1000 if args.quick else 4000
     t0 = time.perf_counter()
@@ -194,6 +256,13 @@ def main() -> None:
     print()
     verdict = "PASS" if speedup >= 5.0 else "BELOW TARGET"
     print(f"enumerate+prune speedup {speedup:.1f}x (target >= 5x): {verdict}")
+
+    if args.mixed_tier:
+        ok = bench_hetero_dedication(quick=args.quick)
+        if not ok:
+            raise SystemExit(
+                "mixed-tier regression: compute-aware dedication did not "
+                "beat compute-blind in the simulator")
 
 
 if __name__ == "__main__":

@@ -51,9 +51,12 @@ def memory_estimator(cluster: str, *, steps: int = 12_000, residual=True):
 def first_runnable(ranked, w, spec):
     """The paper's AMP/Varuna protocol: walk the recommendation list,
     'run' each on the cluster, stop at the first that does not OOM.
-    Returns (candidate, n_trials)."""
+    Returns (candidate, n_trials).  The OOM check is physical: on a tiered
+    fleet the *smallest* GPU overflows first (``mem_floor``, == ``gpu_mem``
+    when homogeneous).  Twin of examples/configure_cluster.py's copy —
+    keep the two in sync."""
     for i, c in enumerate(ranked):
-        if ground_truth_memory(w, c.conf, spec) <= spec.gpu_mem:
+        if ground_truth_memory(w, c.conf, spec) <= spec.mem_floor:
             return c, i + 1
     return None, len(ranked)
 

@@ -9,13 +9,24 @@ attention over sequence shards) as the fourth axis via
 ``SearchSpace(max_cp=...)``; ``cp == 1`` reproduces the paper's 3D setting
 bit-for-bit, and the baselines deliberately stay 3D.
 
+Clusters may be heterogeneous in *compute* as well as interconnect:
+``ClusterSpec`` carries an optional per-node :class:`~repro.core.cluster.
+DeviceTier` table (``mixed_fleet_spec`` / ``degraded_host_spec`` build
+seeded mixed-generation and degraded-host fleets), priced per pipeline
+stage by the slowest member GPU throughout the model, engine, and
+simulator.  Homogeneous specs keep the historical scalars bit-for-bit,
+and the baselines additionally stay compute-blind.
+
 The public entry point is the Planner API (``plan.py``):
 ``Planner(strategy).plan(PlanRequest(...), bw)`` returns a serializable
 :class:`~repro.core.plan.Plan` artifact; the legacy ``configure()`` kwarg
 pile remains as a bit-exact shim over ``Planner(PipetteStrategy())``."""
 
-from .cluster import (ClusterSpec, HIGH_END, MID_RANGE, TPU_POD,
-                      min_group_bw, min_group_bw_batch, profile_bandwidth,
+from .cluster import (ClusterSpec, DeviceTier, HIGH_END, MID_RANGE,
+                      MID_RANGE_DEGRADED, MIXED_A100_V100, TPU_POD,
+                      compute_slowdowns, degraded_host_spec,
+                      min_group_bw, min_group_bw_batch, mixed_fleet_spec,
+                      profile_bandwidth, tier_fingerprint,
                       true_bandwidth_matrix)
 from .simulator import (Conf, Profile, ProfileCache, Workload, build_profile,
                         default_mapping, dp_allreduce_times,

@@ -113,7 +113,10 @@ def mlm_configure(w: Workload, spec: ClusterSpec, bw_true: np.ndarray, *,
         n_enum += 1
         if conf.tp != tp or conf.bs_micro > max_micro:
             continue
-        if ground_truth_memory(w, conf, spec) > spec.gpu_mem:
+        # the trial run is physical: on a tiered fleet it OOMs as soon as
+        # the *smallest* GPU overflows (mem_floor == gpu_mem when
+        # homogeneous); the heuristic itself stays compute-blind
+        if ground_truth_memory(w, conf, spec) > spec.mem_floor:
             continue                      # a human discards the OOM run
         cands.append(Candidate(conf, default_mapping(conf), float("inf"),
                                float("nan")))

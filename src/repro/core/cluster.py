@@ -11,14 +11,68 @@ bidirectional rates, day-to-day drift).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 
 @dataclass(frozen=True)
+class DeviceTier:
+    """One device class in a heterogeneous fleet.
+
+    A tier is an *absolute* description (attainable FLOP/s, memory bytes,
+    GEMM efficiency) of one GPU generation / health state — e.g. the A100
+    and V100 tiers of a mixed fleet, or the "healthy" and "degraded" tiers
+    of a partially-throttled cluster.  Nodes are whole-tier: every GPU on a
+    node belongs to the node's tier (mixed fleets are procured per node,
+    and a thermally-degraded host throttles all of its GPUs).
+
+    Attributes:
+        flops: attainable tensor FLOP/s of one GPU of this tier.
+        mem: device memory in bytes.
+        efficiency: fraction of ``flops`` reached by real GEMMs.
+        name: label for provenance / reports ("a100", "degraded", ...).
+    """
+    flops: float
+    mem: float
+    efficiency: float = 0.45
+    name: str = ""
+
+    def __post_init__(self):
+        if not (self.flops > 0 and self.mem > 0 and 0 < self.efficiency <= 1):
+            raise ValueError(
+                f"DeviceTier needs flops > 0, mem > 0, 0 < efficiency <= 1; "
+                f"got flops={self.flops!r}, mem={self.mem!r}, "
+                f"efficiency={self.efficiency!r}")
+
+    @property
+    def throughput(self) -> float:
+        """Attained GEMM throughput (``flops * efficiency``), FLOP/s."""
+        return self.flops * self.efficiency
+
+
+@dataclass(frozen=True)
 class ClusterSpec:
+    """Cluster description: sizes, interconnect, and per-GPU compute/memory.
+
+    The scalar ``gpu_flops`` / ``gpu_mem`` / ``efficiency`` fields describe
+    a *homogeneous* fleet — and double as the **reference device** (the one
+    profiling runs on) when the optional tier table is set.  Heterogeneous
+    compute is expressed with ``tiers`` (a table of :class:`DeviceTier`)
+    plus ``node_tiers`` (one tier index per node); the seeded generators
+    :func:`mixed_fleet_spec` and :func:`degraded_host_spec` build such
+    specs with the reference scalars pinned to the fastest tier, so
+    per-GPU slowdowns are >= 1.  A spec whose tiers all match the reference
+    scalars is *indistinguishable* from a scalar spec everywhere
+    (:func:`compute_slowdowns` returns ``None`` and every consumer takes
+    the historical bit-exact path).
+
+    All fields are validated on construction — a bad spec fails here with
+    a named field, not deep inside the bandwidth generator.
+    """
     name: str
     n_nodes: int
     gpus_per_node: int = 8
@@ -30,6 +84,47 @@ class ClusterSpec:
     heterogeneity: float = 0.28      # lognormal sigma of inter-node factors
     slow_frac: float = 0.08          # fraction of node pairs that straggle
     seed: int = 0
+    # --- heterogeneous compute (empty = homogeneous, the historical case) ---
+    tiers: Tuple[DeviceTier, ...] = ()
+    node_tiers: Tuple[int, ...] = ()   # node -> index into ``tiers``
+
+    def __post_init__(self):
+        # normalise list inputs so the spec stays hashable
+        if not isinstance(self.tiers, tuple):
+            object.__setattr__(self, "tiers", tuple(self.tiers))
+        if not isinstance(self.node_tiers, tuple):
+            object.__setattr__(self, "node_tiers", tuple(self.node_tiers))
+        if self.n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.gpus_per_node < 1:
+            raise ValueError(
+                f"gpus_per_node must be >= 1, got {self.gpus_per_node}")
+        for field in ("intra_bw", "inter_bw", "gpu_flops", "gpu_mem"):
+            v = getattr(self, field)
+            if not v > 0:
+                raise ValueError(f"{field} must be > 0, got {v!r}")
+        if not 0 < self.efficiency <= 1:
+            raise ValueError(
+                f"efficiency must be in (0, 1], got {self.efficiency!r}")
+        if self.heterogeneity < 0 or not 0 <= self.slow_frac <= 1:
+            raise ValueError(
+                "heterogeneity must be >= 0 and slow_frac in [0, 1]; got "
+                f"heterogeneity={self.heterogeneity!r}, "
+                f"slow_frac={self.slow_frac!r}")
+        if bool(self.tiers) != bool(self.node_tiers):
+            raise ValueError(
+                "tiers and node_tiers must be given together (a tier table "
+                "without a node assignment, or vice versa, is ambiguous)")
+        if self.tiers:
+            if len(self.node_tiers) != self.n_nodes:
+                raise ValueError(
+                    f"node_tiers must assign every node: expected "
+                    f"{self.n_nodes} entries, got {len(self.node_tiers)}")
+            bad = [t for t in self.node_tiers
+                   if not 0 <= int(t) < len(self.tiers)]
+            if bad:
+                raise ValueError(
+                    f"node_tiers out of range [0, {len(self.tiers)}): {bad}")
 
     @property
     def n_gpus(self) -> int:
@@ -39,7 +134,181 @@ class ClusterSpec:
         return g // self.gpus_per_node
 
     def with_nodes(self, n: int) -> "ClusterSpec":
-        return dataclasses.replace(self, n_nodes=n)
+        """Resize to ``n`` nodes.  A tiered spec keeps its tier *pattern*:
+        the node -> tier assignment is truncated when shrinking and cycled
+        when growing (so a half-A100/half-V100 fleet stays mixed)."""
+        nt = self.node_tiers
+        if self.tiers:
+            reps = -(-n // len(nt))
+            nt = (nt * reps)[:n]
+        return dataclasses.replace(self, n_nodes=n, node_tiers=nt)
+
+    # -- per-GPU device views (scalar-backed when no tiers are set) --------
+
+    @property
+    def has_tiers(self) -> bool:
+        return bool(self.tiers)
+
+    def tier_of(self, g: int) -> DeviceTier:
+        """The :class:`DeviceTier` of GPU ``g`` (a scalar-backed pseudo-tier
+        for homogeneous specs)."""
+        if not self.tiers:
+            return DeviceTier(self.gpu_flops, self.gpu_mem, self.efficiency)
+        return self.tiers[self.node_tiers[self.node_of(g)]]
+
+    def _per_gpu(self, values: Sequence[float], scalar: float) -> np.ndarray:
+        if not self.tiers:
+            return np.full(self.n_gpus, scalar)
+        per_node = np.asarray(values)[np.asarray(self.node_tiers, np.intp)]
+        return np.repeat(per_node, self.gpus_per_node)
+
+    def per_gpu_flops(self) -> np.ndarray:
+        """``(n_gpus,)`` attainable FLOP/s per GPU."""
+        return self._per_gpu([t.flops for t in self.tiers], self.gpu_flops)
+
+    def per_gpu_mem(self) -> np.ndarray:
+        """``(n_gpus,)`` device-memory bytes per GPU."""
+        return self._per_gpu([t.mem for t in self.tiers], self.gpu_mem)
+
+    def per_gpu_throughput(self) -> np.ndarray:
+        """``(n_gpus,)`` attained GEMM FLOP/s (``flops * efficiency``)."""
+        return self._per_gpu([t.throughput for t in self.tiers],
+                             self.gpu_flops * self.efficiency)
+
+    @property
+    def mem_floor(self) -> float:
+        """The tightest per-GPU memory capacity — what a single cluster-wide
+        memory budget must respect when every GPU hosts a worker.  Exactly
+        ``gpu_mem`` for homogeneous specs."""
+        if not self.tiers:
+            return self.gpu_mem
+        return min(self.tiers[t].mem for t in set(self.node_tiers))
+
+
+def compute_slowdowns(spec: ClusterSpec) -> Optional[np.ndarray]:
+    """Per-GPU compute slowdown vs the spec's reference device, or ``None``.
+
+    The reference is the scalar ``gpu_flops * efficiency`` the profiles are
+    priced at; GPU ``g``'s slowdown is ``reference / throughput_g`` (> 1 for
+    slower tiers).  Returns ``None`` — the signal every consumer uses to
+    take the historical scalar path, bit-for-bit — when the spec has no
+    tier table *or* when every tier matches the reference exactly (a
+    single-tier spec built from the scalars degenerates here by design).
+    """
+    if not spec.tiers:
+        return None
+    slow = (spec.gpu_flops * spec.efficiency) / spec.per_gpu_throughput()
+    if np.all(slow == 1.0):
+        return None
+    return slow
+
+
+def tier_fingerprint(spec: ClusterSpec) -> Optional[str]:
+    """SHA-256 digest of the tier table + node assignment (``None`` for
+    homogeneous specs).  Recorded in Plan provenance so a plan can be
+    matched against the fleet composition it was computed for."""
+    if not spec.tiers:
+        return None
+    h = hashlib.sha256()
+    for t in spec.tiers:
+        h.update(repr((t.flops, t.mem, t.efficiency, t.name)).encode())
+    h.update(repr(tuple(int(t) for t in spec.node_tiers)).encode())
+    return h.hexdigest()
+
+
+def mixed_fleet_spec(name: str, n_nodes: int,
+                     tiers: Sequence[DeviceTier],
+                     fractions: Optional[Sequence[float]] = None, *,
+                     gpus_per_node: int = 8, intra_bw: float = 300e9,
+                     inter_bw: float = 12.5e9, heterogeneity: float = 0.28,
+                     slow_frac: float = 0.08, seed: int = 0) -> ClusterSpec:
+    """Seeded mixed-generation fleet: nodes drawn from ``tiers``.
+
+    Node counts follow ``fractions`` (equal split by default, remainders to
+    the leading tiers) and the assignment order is a seeded permutation —
+    mixed fleets rarely rack their generations contiguously.  The reference
+    scalars (``gpu_flops``/``gpu_mem``/``efficiency``) are pinned to the
+    highest-throughput tier, so every per-GPU slowdown is >= 1.
+
+    Args:
+        name: spec name.
+        n_nodes: fleet size in nodes.
+        tiers: device classes present in the fleet.
+        fractions: fraction of nodes per tier (normalised; default equal).
+        gpus_per_node / intra_bw / inter_bw / heterogeneity / slow_frac /
+            seed: as on :class:`ClusterSpec` (``seed`` also drives the
+            node-assignment shuffle).
+
+    Returns:
+        A validated heterogeneous :class:`ClusterSpec`.
+    """
+    tiers = tuple(tiers)
+    if not tiers:
+        raise ValueError("mixed_fleet_spec needs at least one tier")
+    if fractions is None:
+        fractions = [1.0 / len(tiers)] * len(tiers)
+    if len(fractions) != len(tiers) or any(f < 0 for f in fractions):
+        raise ValueError("fractions must be non-negative, one per tier")
+    total = float(sum(fractions))
+    if total <= 0:
+        raise ValueError("fractions must sum to a positive value")
+    counts = [int(f / total * n_nodes) for f in fractions]
+    # remainder nodes go to the leading tiers the caller actually asked
+    # for — a tier with fraction 0.0 must stay absent from the fleet
+    present = [i for i, f in enumerate(fractions) if f > 0]
+    for k in range(n_nodes - sum(counts)):
+        counts[present[k % len(present)]] += 1
+    assignment = np.repeat(np.arange(len(tiers)), counts)
+    rng = np.random.default_rng(seed * 999983 + 7)
+    rng.shuffle(assignment)
+    ref = max(tiers, key=lambda t: t.throughput)
+    return ClusterSpec(name, n_nodes, gpus_per_node=gpus_per_node,
+                       intra_bw=intra_bw, inter_bw=inter_bw,
+                       gpu_flops=ref.flops, gpu_mem=ref.mem,
+                       efficiency=ref.efficiency,
+                       heterogeneity=heterogeneity, slow_frac=slow_frac,
+                       seed=seed, tiers=tiers,
+                       node_tiers=tuple(int(t) for t in assignment))
+
+
+def degraded_host_spec(base: ClusterSpec, *, degraded_frac: float = 0.25,
+                       flops_factor: float = 0.5, mem_factor: float = 1.0,
+                       seed: int = 0) -> ClusterSpec:
+    """Seeded partially-degraded fleet: ``base`` with a fraction of its
+    hosts throttled (thermal issues, a dying HBM stack, MIG leftovers).
+
+    Tier 0 is the healthy base device; tier 1 scales its flops by
+    ``flops_factor`` and its memory by ``mem_factor``.  The degraded node
+    set is a seeded choice, at least one node when ``degraded_frac > 0``.
+
+    Args:
+        base: homogeneous spec to degrade (must not already carry tiers).
+        degraded_frac: fraction of nodes to throttle.
+        flops_factor / mem_factor: multipliers applied to the degraded tier.
+        seed: drives the degraded-node choice.
+
+    Returns:
+        A heterogeneous :class:`ClusterSpec` named ``<base.name>-degraded``.
+    """
+    if base.tiers:
+        raise ValueError("degraded_host_spec expects a homogeneous base")
+    if not 0 < degraded_frac <= 1:
+        raise ValueError(f"degraded_frac must be in (0, 1], got "
+                         f"{degraded_frac!r}")
+    healthy = DeviceTier(base.gpu_flops, base.gpu_mem, base.efficiency,
+                         name="healthy")
+    degraded = DeviceTier(base.gpu_flops * flops_factor,
+                          base.gpu_mem * mem_factor, base.efficiency,
+                          name="degraded")
+    n_deg = max(1, int(round(degraded_frac * base.n_nodes)))
+    rng = np.random.default_rng(seed * 424243 + 1)
+    deg_nodes = set(int(i) for i in
+                    rng.choice(base.n_nodes, size=n_deg, replace=False))
+    node_tiers = tuple(1 if i in deg_nodes else 0
+                       for i in range(base.n_nodes))
+    return dataclasses.replace(base, name=f"{base.name}-degraded",
+                               tiers=(healthy, degraded),
+                               node_tiers=node_tiers)
 
 
 # The paper's two evaluation environments (Table I).
@@ -55,6 +324,25 @@ HIGH_END = ClusterSpec("high-end", n_nodes=16, intra_bw=600e9,
 TPU_POD = ClusterSpec("tpu-v5e-pod", n_nodes=16, gpus_per_node=16,
                       intra_bw=50e9, inter_bw=25e9, gpu_flops=197e12,
                       gpu_mem=16e9, efficiency=0.55, seed=31)
+
+# Device tiers of the mixed-fleet presets: the A100 tier matches HIGH_END's
+# per-GPU numbers, the V100 tier MID_RANGE's — so the mixed fleet sits
+# exactly between the paper's two evaluation environments.
+A100_TIER = DeviceTier(flops=280e12, mem=80e9, efficiency=0.45, name="a100")
+V100_TIER = DeviceTier(flops=112e12, mem=32e9, efficiency=0.45, name="v100")
+
+# 16-node mixed-generation fleet, half A100 / half V100 nodes in a seeded
+# shuffle — the headline heterogeneous-compute scenario (compute-aware
+# dedication must beat compute-blind assignment here, see
+# tests/test_hetero_dedication.py and benchmarks/bench_configure.py).
+MIXED_A100_V100 = mixed_fleet_spec("mixed-a100-v100", 16,
+                                   (A100_TIER, V100_TIER), (0.5, 0.5),
+                                   intra_bw=300e9, inter_bw=12.5e9, seed=47)
+
+# MID_RANGE with a quarter of its hosts thermally throttled to half speed —
+# the degraded-host preset (examples/configure_cluster.py demos it).
+MID_RANGE_DEGRADED = degraded_host_spec(MID_RANGE, degraded_frac=0.25,
+                                        flops_factor=0.5, seed=53)
 
 
 def true_bandwidth_matrix(spec: ClusterSpec, day: int = 0) -> np.ndarray:

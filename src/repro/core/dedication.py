@@ -10,7 +10,8 @@ iteration cap so tests stay fast.
 The hot loop is driven by :class:`DedicationEngine`, an incremental
 vectorized scorer: the three SA moves touch a known set of permutation
 positions, and only the TP groups / pipeline chains / first-stage DP groups
-(and, for 4D configurations, the context-parallel ring groups) containing
+(and, for 4D configurations, the context-parallel ring groups; on tiered
+clusters, the pipeline stages whose compute-slowness changed) containing
 those positions are re-gathered and re-reduced — everything else
 comes from per-group caches.  Scores are bit-identical to the full
 :func:`repro.core.latency.pipette_latency` (and its pure-Python reference).
@@ -25,8 +26,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from .cluster import ClusterSpec
-from .latency import pipette_latency
+from .cluster import ClusterSpec, compute_slowdowns
+from .latency import _hetero_combine, pipette_latency
 from .simulator import Conf, Profile
 
 
@@ -203,11 +204,14 @@ class DedicationEngine:
 
     ``score()`` evaluates a permutation from scratch and fills per-group
     caches (TP-group slowdowns, pipeline-chain times, stage-0 DP all-reduce
-    times).  ``propose()`` re-gathers only the groups containing positions a
+    times, and — on tiered clusters — per-stage compute slowdowns).
+    ``propose()`` re-gathers only the groups containing positions a
     move touched and combines them with the cached remainder; ``commit()``
     promotes a proposal to the new committed state.  All values are
     bit-identical to :func:`repro.core.latency.pipette_latency` on the
-    corresponding mapping.
+    corresponding mapping.  ``compute_aware=False`` ignores device tiers
+    (every GPU priced at reference speed) — the compute-blind baseline the
+    heterogeneous evaluation compares against.
 
     Example:
         >>> eng = DedicationEngine(conf, bw, prof, spec)
@@ -218,7 +222,8 @@ class DedicationEngine:
     """
 
     def __init__(self, conf: Conf, bw: np.ndarray, prof: Profile,
-                 spec: ClusterSpec, index: Optional[GroupIndex] = None):
+                 spec: ClusterSpec, index: Optional[GroupIndex] = None,
+                 compute_aware: bool = True):
         if index is not None and \
                 (index.pp, index.tp, index.cp, index.dp) != \
                 (conf.pp, conf.tp, conf.cp, conf.dp):
@@ -228,6 +233,12 @@ class DedicationEngine:
         self.prof = prof
         self.spec = spec
         self.idx = index if index is not None else GroupIndex.build(conf)
+        # Heterogeneous compute: per-GPU slowdowns (None on compute-uniform
+        # specs — the scalar Eq. 3-4 path, bit-exact with history).
+        # ``compute_aware=False`` forces the blind path even on tiered
+        # specs: the ablation/baseline that prices every GPU at reference
+        # speed (the comparison point for the compute-aware win).
+        self._slow = compute_slowdowns(spec) if compute_aware else None
         # Move-loop constants, built once instead of per proposal.  All are
         # properties of GPU *pairs*, so group gathers pull them directly:
         #   _bw_noself  — bw with the self-link set to inf (min_group_bw mask)
@@ -259,6 +270,7 @@ class DedicationEngine:
         self._chain_vals: Optional[np.ndarray] = None
         self._dp0_vals: Optional[np.ndarray] = None
         self._cp_vals: Optional[np.ndarray] = None
+        self._stage_vals: Optional[np.ndarray] = None
 
     # -- per-group recomputation (vectorized gathers over a group subset) --
 
@@ -288,6 +300,15 @@ class DedicationEngine:
             t = t + self._hop_cost[src[x], dst[x]]
         return t
 
+    def _stage_scales(self, perm: np.ndarray, xsel) -> np.ndarray:
+        # max member-GPU compute slowdown per pipeline stage — stage x owns
+        # the contiguous position block [x*nc, (x+1)*nc), so the gather is
+        # a plain reshape (same values as latency._stage_compute_scale's
+        # mapping4 gather: max over the same member set)
+        nc = self.conf.tp * self.conf.cp * self.conf.dp
+        ids = perm.reshape(self.conf.pp, nc)[xsel]
+        return self._slow[ids].max(axis=1)
+
     def _dp0_times(self, perm: np.ndarray, ysel) -> np.ndarray:
         # Specialised hier_allreduce_batch with pair matrices and ring
         # coefficients hoisted to __init__; arithmetic is identical (see that
@@ -312,7 +333,8 @@ class DedicationEngine:
 
     # -- scoring --
 
-    def _combine(self, tp_vals, chain_vals, dp0_vals, cp_vals) -> float:
+    def _combine(self, tp_vals, chain_vals, dp0_vals, cp_vals,
+                 stage_vals=None) -> float:
         conf, prof = self.conf, self.prof
         c = prof.c_fwd + prof.c_bwd
         scale = 1.0 if conf.tp == 1 else float(max(1.0, tp_vals.max()))
@@ -320,9 +342,13 @@ class DedicationEngine:
         cscale = 1.0 if conf.cp == 1 else float(max(1.0, cp_vals.max()))
         t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * cscale
         t_pp = 0.0 if conf.pp == 1 else float(max(0.0, chain_vals.max()))
+        t_dp = float(max(0.0, dp0_vals.max()))
+        if stage_vals is not None:
+            # tiered cluster: shared per-stage combination (bit-identical
+            # to pipette_latency via the same _hetero_combine arithmetic)
+            return _hetero_combine(conf, prof, t_cm, t_pp, t_dp, stage_vals)
         t_bubble = conf.pp * (c + t_cm) + t_pp
         t_straggler = (conf.pp - 1) * (c + t_cm)
-        t_dp = float(max(0.0, dp0_vals.max()))
         return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
 
     def score(self, perm: np.ndarray) -> float:
@@ -340,8 +366,11 @@ class DedicationEngine:
         self._dp0_vals = self._dp0_times(perm, slice(None))
         self._cp_vals = (self._cp_scales(perm, slice(None))
                          if conf.cp > 1 else np.ones(1))
+        self._stage_vals = (self._stage_scales(perm, slice(None))
+                            if self._slow is not None else None)
         return self._combine(self._tp_vals, self._chain_vals,
-                             self._dp0_vals, self._cp_vals)
+                             self._dp0_vals, self._cp_vals,
+                             self._stage_vals)
 
     def propose(self, cand: np.ndarray, touched: np.ndarray):
         """Score candidate ``cand`` that differs from the committed
@@ -416,13 +445,24 @@ class DedicationEngine:
             cp_vals = self._cp_vals.copy()
             cp_vals[gsel] = self._cp_scales(cand, gsel)
 
-        val = self._combine(tp_vals, chain_vals, dp0_vals, cp_vals)
-        return val, (tp_vals, chain_vals, dp0_vals, cp_vals)
+        stage_vals = self._stage_vals
+        if self._slow is not None:
+            # stage of position p is p // nc; a move touches at most the
+            # [lo // nc, hi // nc] stage range (contiguous by construction)
+            xi, xj = lo // nc, hi // nc
+            xsel = slice(xi, xj + 1) if span else \
+                np.array((xi,) if xi == xj else (xi, xj))
+            stage_vals = self._stage_vals.copy()
+            stage_vals[xsel] = self._stage_scales(cand, xsel)
+
+        val = self._combine(tp_vals, chain_vals, dp0_vals, cp_vals,
+                            stage_vals)
+        return val, (tp_vals, chain_vals, dp0_vals, cp_vals, stage_vals)
 
     def commit(self, pending) -> None:
         """Promote a :meth:`propose` result to the committed state."""
         (self._tp_vals, self._chain_vals, self._dp0_vals,
-         self._cp_vals) = pending
+         self._cp_vals, self._stage_vals) = pending
 
 
 # ---------------------------------------------------------------------------
@@ -434,7 +474,8 @@ def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
            time_limit_s: float = 2.0, max_iters: int = 20_000,
            alpha: float = 0.999, seed: int = 0,
            init_perm: Optional[np.ndarray] = None,
-           engine: Optional[DedicationEngine] = None) -> SAResult:
+           engine: Optional[DedicationEngine] = None,
+           compute_aware: bool = True) -> SAResult:
     """Simulated-annealing worker dedication (Algorithm 1, line 7).
 
     Args:
@@ -452,6 +493,9 @@ def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
         seed: RNG seed; runs are deterministic given (seed, inputs).
         init_perm: starting permutation (identity when ``None``).
         engine: reuse a pre-built engine (e.g. shared index tensors).
+        compute_aware: forwarded to :class:`DedicationEngine` when one is
+            built here; ``False`` anneals compute-blind on tiered specs
+            (ignored when ``engine`` is given).
 
     Returns:
         :class:`SAResult` with the best mapping found and its trace.
@@ -463,7 +507,8 @@ def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
     use_engine = objective is None
     if use_engine:
         if engine is None:
-            engine = DedicationEngine(conf, bw, prof, spec)
+            engine = DedicationEngine(conf, bw, prof, spec,
+                                      compute_aware=compute_aware)
         cur = engine.score(perm)
     else:
         cur = objective(perm)
@@ -506,7 +551,8 @@ def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
                       time_limit_s: float = 2.0, max_iters: int = 20_000,
                       alpha: float = 0.999, seed: int = 0,
                       init_perm: Optional[np.ndarray] = None,
-                      engine: Optional[DedicationEngine] = None) -> SAResult:
+                      engine: Optional[DedicationEngine] = None,
+                      compute_aware: bool = True) -> SAResult:
     """Best-of-``n_chains`` independent annealing restarts.
 
     The wall-clock and iteration budgets are split evenly across chains, so
@@ -522,7 +568,8 @@ def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
     if n_chains < 1:
         raise ValueError("n_chains must be >= 1")
     if engine is None:
-        engine = DedicationEngine(conf, bw, prof, spec)
+        engine = DedicationEngine(conf, bw, prof, spec,
+                                  compute_aware=compute_aware)
     per_t = time_limit_s / n_chains
     per_it = max(1, max_iters // n_chains)
     best: Optional[SAResult] = None

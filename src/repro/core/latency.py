@@ -18,10 +18,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from typing import Sequence
+from typing import Optional, Sequence
 
-from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
-                      ring_allreduce_time)
+from .cluster import (ClusterSpec, compute_slowdowns, min_group_bw,
+                      min_group_bw_batch, ring_allreduce_time)
 from .simulator import (Conf, Profile, default_mapping, dp_allreduce_times,
                         dp_allreduce_times_ref, mapping4)
 
@@ -189,18 +189,75 @@ def _t_dp_first_stage(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     return float(dp_allreduce_times(conf, mapping, bw, prof, spec)[0])
 
 
+def _stage_compute_scale(conf: Conf, mapping: np.ndarray,
+                         spec: ClusterSpec) -> Optional[np.ndarray]:
+    """Per-stage compute slowdown of a mapping on a tiered cluster.
+
+    Stage ``x``'s GEMM work is evenly sharded over its ``tp * cp * dp``
+    member GPUs, so its per-microbatch compute time stretches by the
+    *slowest* member's :func:`~repro.core.cluster.compute_slowdowns` factor
+    (Megatron-LM's observation that the slowest rank sets stage time).
+    Returns ``None`` for compute-uniform specs — the signal to take the
+    historical scalar Eq. 3-4 path bit-for-bit.
+
+    Args:
+        conf: parallelism configuration.
+        mapping: any mapping4-compatible worker -> GPU dedication.
+        spec: cluster description (tier table consulted).
+
+    Returns:
+        ``(pp,)`` max member slowdown per stage, or ``None``.
+    """
+    slow = compute_slowdowns(spec)
+    if slow is None:
+        return None
+    return slow[mapping4(conf, mapping)].reshape(conf.pp, -1).max(axis=1)
+
+
+def _hetero_combine(conf: Conf, prof: Profile, t_cm: float, t_pp: float,
+                    t_dp: float, stage_scale: np.ndarray) -> float:
+    """Eq. 3-4 generalised to per-stage compute times.
+
+    Per-stage compute ``c_x = (c_fwd + c_bwd) * stage_work_x * scale_x``;
+    the steady state is throughput-bound by the slowest stage (``c_max``)
+    while the fill/drain pays every stage once (``sum c_x``):
+
+        T = (pp * (c_max + t_cm) + t_pp) * (n_mb / pp)
+            + (sum_x c_x - c_max) + (pp - 1) * t_cm + t_dp
+
+    With uniform stages (``c_x == c``) this reduces *algebraically* to the
+    scalar formula — but compute-uniform specs never reach here (they take
+    the scalar branch), so homogeneous results stay bit-identical.  This
+    is what the dedication engine exploits: herding slow GPUs into few
+    (and light) stages shrinks ``sum c_x`` and ``c_max``.
+    """
+    c = prof.c_fwd + prof.c_bwd
+    w = (np.asarray(prof.stage_work) if prof.stage_work is not None
+         else np.ones(conf.pp))
+    c_x = c * w * stage_scale
+    c_max = float(c_x.max())
+    c_sum = float(c_x.sum())
+    t_bubble = conf.pp * (c_max + t_cm) + t_pp
+    return (t_bubble * (conf.n_mb / conf.pp) + (c_sum - c_max)
+            + (conf.pp - 1) * t_cm + t_dp)
+
+
 def _combine_eq34(conf: Conf, prof: Profile, tp_scale: float, t_pp: float,
-                  t_dp: float, cp_scale: float = 1.0) -> float:
+                  t_dp: float, cp_scale: float = 1.0,
+                  stage_scale: Optional[np.ndarray] = None) -> float:
     """Eq. 3-4 scalar combination shared by every scorer of this model:
     ``T = T_bubble * (n_mb / pp) + T_straggler + T_dp``.
 
     The per-microbatch communication folds the TP all-reduce and (for 4D
     configurations) the ring KV-exchange of context parallelism; at
     ``cp == 1`` the profiled ``t_cp_*`` terms are exactly 0, so the 3D
-    value is reproduced bit-for-bit."""
+    value is reproduced bit-for-bit.  ``stage_scale`` (tiered clusters
+    only) switches to the per-stage :func:`_hetero_combine`."""
     c = prof.c_fwd + prof.c_bwd
     t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * tp_scale
     t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * cp_scale
+    if stage_scale is not None:
+        return _hetero_combine(conf, prof, t_cm, t_pp, t_dp, stage_scale)
     t_bubble = conf.pp * (c + t_cm) + t_pp
     t_straggler = (conf.pp - 1) * (c + t_cm)
     return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
@@ -221,12 +278,15 @@ def pipette_latency(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     Returns:
         Estimated seconds per training iteration.  Uses the vectorized
         group reductions; bit-identical to :func:`pipette_latency_ref`.
+        On tiered specs the compute term additionally prices each stage at
+        its slowest member GPU (:func:`_stage_compute_scale`).
     """
     scale = _tp_scale(conf, mapping, bw, spec, prof.tp_ref_bw)
     cscale = _cp_scale(conf, mapping, bw, prof.cp_ref_bw)
     t_pp = _t_pp_chain(conf, mapping, bw, prof)
     t_dp = _t_dp_first_stage(conf, mapping, bw, prof, spec)
-    return _combine_eq34(conf, prof, scale, t_pp, t_dp, cscale)
+    sscale = _stage_compute_scale(conf, mapping, spec)
+    return _combine_eq34(conf, prof, scale, t_pp, t_dp, cscale, sscale)
 
 
 def default_mapping_latencies(confs: Sequence[Conf],
@@ -271,15 +331,17 @@ def default_mapping_latencies(confs: Sequence[Conf],
             cscale = _cp_scale(conf, m, bw, prof.cp_ref_bw)
             hop = _pp_hop_bw(conf, m, bw) if conf.pp > 1 else None
             t_dp = float(dp_allreduce_times(conf, m, bw, prof, spec)[0])
-            entry = cache[shape] = (scale, cscale, hop, t_dp,
+            sscale = _stage_compute_scale(conf, m, spec)
+            entry = cache[shape] = (scale, cscale, hop, t_dp, sscale,
                                     (prof.tp_ref_bw, prof.cp_ref_bw,
-                                     prof.msg_dp))
-        scale, cscale, hop, t_dp, src_fields = entry
-        assert (prof.tp_ref_bw, prof.cp_ref_bw, prof.msg_dp) == src_fields, \
+                                     prof.msg_dp, prof.stage_work))
+        scale, cscale, hop, t_dp, sscale, src_fields = entry
+        assert (prof.tp_ref_bw, prof.cp_ref_bw, prof.msg_dp,
+                prof.stage_work) == src_fields, \
             f"profiles vary within shape {shape}; per-shape cache invalid"
         t_pp = 0.0 if conf.pp == 1 \
             else _t_pp_from_hops(conf, hop, prof.msg_pp)
-        out[i] = _combine_eq34(conf, prof, scale, t_pp, t_dp, cscale)
+        out[i] = _combine_eq34(conf, prof, scale, t_pp, t_dp, cscale, sscale)
     return out
 
 
@@ -288,7 +350,9 @@ def pipette_latency_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     """Pure-Python reference scorer (the pre-vectorization implementation).
 
     Kept as the oracle for equivalence tests and the moves/sec benchmark
-    baseline; semantics identical to :func:`pipette_latency`.
+    baseline; semantics identical to :func:`pipette_latency` (including the
+    per-stage compute path on tiered specs, recomputed here with explicit
+    loops).
     """
     c = prof.c_fwd + prof.c_bwd
     t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * _tp_scale_ref(
@@ -296,9 +360,16 @@ def pipette_latency_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * _cp_scale_ref(
         conf, mapping, bw, prof.cp_ref_bw)
     t_pp = _t_pp_chain_ref(conf, mapping, bw, prof)
+    t_dp = float(dp_allreduce_times_ref(conf, mapping, bw, prof, spec)[0])
+    slow = compute_slowdowns(spec)
+    if slow is not None:
+        m4 = mapping4(conf, mapping)
+        scale = np.empty(conf.pp)
+        for x in range(conf.pp):
+            scale[x] = max(float(slow[int(g)]) for g in m4[x].flat)
+        return _hetero_combine(conf, prof, t_cm, t_pp, t_dp, scale)
     t_bubble = conf.pp * (c + t_cm) + t_pp
     t_straggler = (conf.pp - 1) * (c + t_cm)
-    t_dp = float(dp_allreduce_times_ref(conf, mapping, bw, prof, spec)[0])
     return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp
 
 

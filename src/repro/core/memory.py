@@ -8,6 +8,13 @@ misses — CUDA/runtime context, collective buffers, workspace, allocator
 fragmentation, and a reproducible per-config residual.  The MLP estimator
 is trained ONLY on configs using <= ``fit_nodes`` nodes (paper: 4 nodes /
 32 GPUs) and must extrapolate to the full cluster.
+
+Heterogeneous fleets: peak *usage* is tier-independent (the model shards
+work, not hardware), so the estimator and its feature layout are untouched
+by device tiers — only the capacity side moves.
+``MemoryEstimator.fits_spec`` checks the prediction against each GPU's own
+memory (the ``spec.mem_floor`` of the tier table), which is what the
+search pipeline budgets against by default.
 """
 from __future__ import annotations
 
@@ -210,6 +217,17 @@ class MemoryEstimator:
 
     def fits(self, cfg: ModelConfig, conf: Conf, mem_limit: float) -> bool:
         return self.predict(cfg, conf) <= mem_limit * self.soft_margin
+
+    def fits_spec(self, cfg: ModelConfig, conf: Conf,
+                  spec: ClusterSpec) -> bool:
+        """Capacity check against every GPU's *own* memory.
+
+        Pipette's 1:1 dedication places a worker on every GPU, and the
+        predicted peak is a worst-GPU number — so "each GPU's capacity"
+        collapses to the tightest device tier (``spec.mem_floor``, which is
+        exactly ``gpu_mem`` on homogeneous specs).  This is the check the
+        search pipeline applies by default on tiered clusters."""
+        return self.fits(cfg, conf, spec.mem_floor)
 
 
 def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,

@@ -37,12 +37,16 @@ from typing import ClassVar, Optional, Protocol, Tuple, runtime_checkable
 import numpy as np
 
 from .baselines import amp_configure, mlm_configure, varuna_configure
-from .cluster import ClusterSpec
+from .cluster import ClusterSpec, tier_fingerprint
 from .memory import MemoryEstimator
 from .search import Candidate, Overhead, SearchResult, run_search
 from .simulator import Conf, Workload
 
-PLAN_SCHEMA_VERSION = 1
+# 2: heterogeneous-compute provenance — ``provenance.tiers`` records the
+#    device-tier table digest, the table itself, and the node assignment
+#    (null for homogeneous clusters).  Any further change to the serialized
+#    shape MUST bump this (tests/test_plan_golden.py enforces it).
+PLAN_SCHEMA_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +237,22 @@ def bw_fingerprint(bw: np.ndarray) -> str:
     return h.hexdigest()
 
 
+def tier_provenance(spec: ClusterSpec) -> Optional[dict]:
+    """Device-tier provenance of a cluster spec (``None`` when homogeneous):
+    the :func:`~repro.core.cluster.tier_fingerprint` digest plus the tier
+    table and node assignment themselves, so a plan records exactly which
+    fleet composition it priced — a re-tiered cluster (node swapped,
+    host degraded) yields a different digest, signalling staleness."""
+    digest = tier_fingerprint(spec)
+    if digest is None:
+        return None
+    return {"digest": digest,
+            "tiers": [{"flops": t.flops, "mem": t.mem,
+                       "efficiency": t.efficiency, "name": t.name}
+                      for t in spec.tiers],
+            "node_tiers": [int(t) for t in spec.node_tiers]}
+
+
 def estimator_provenance(est: Optional[MemoryEstimator]) -> Optional[dict]:
     """Fit provenance of a memory estimator (``None`` for memory-unaware
     strategies): which feature space it was fit on and against which
@@ -260,6 +280,8 @@ class Provenance:
         model / seq / bs_global: the workload.
         space / budget: the request's search-space and budget knobs.
         estimator: :func:`estimator_provenance` dict, or ``None``.
+        tiers: :func:`tier_provenance` dict (device-tier table digest +
+            node assignment), or ``None`` for homogeneous clusters.
     """
     strategy: str
     seed: int
@@ -272,6 +294,7 @@ class Provenance:
     space: SearchSpace
     budget: Budget
     estimator: Optional[dict] = None
+    tiers: Optional[dict] = None
 
 
 # ---------------------------------------------------------------------------
@@ -385,7 +408,8 @@ class Plan:
                           model=w.cfg.name, seq=w.seq,
                           bs_global=w.bs_global, space=req.space,
                           budget=req.budget,
-                          estimator=estimator_provenance(estimator))
+                          estimator=estimator_provenance(estimator),
+                          tiers=tier_provenance(req.spec))
         best = res.best
         return cls(conf=best.conf if best else None,
                    mapping=(np.asarray(best.mapping).copy()
@@ -421,6 +445,7 @@ class Plan:
                 "space": dataclasses.asdict(prov.space),
                 "budget": dataclasses.asdict(prov.budget),
                 "estimator": prov.estimator,
+                "tiers": prov.tiers,
             },
         }
 
@@ -449,7 +474,8 @@ class Plan:
                           seq=p["seq"], bs_global=p["bs_global"],
                           space=SearchSpace(**p["space"]),
                           budget=Budget(**p["budget"]),
-                          estimator=p["estimator"])
+                          estimator=p["estimator"],
+                          tiers=p["tiers"])
         best = d["best"]
         return cls(
             conf=None if best is None else _conf_in(best["conf"]),

@@ -151,7 +151,9 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
             ``max_cp > 1`` (:func:`~repro.core.memory.fit_memory_estimator`)
             to score a 4D search.
         mem_limit: per-GPU memory budget in bytes (default
-            ``req.spec.gpu_mem``).
+            ``req.spec.mem_floor`` — every GPU hosts a worker, so the
+            budget must respect the *tightest* device tier; identical to
+            ``gpu_mem`` on homogeneous specs).
         dedicate: ``False`` gives the PPT-L ablation (latency+memory
             estimators only, identity mapping).
 
@@ -164,7 +166,7 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
     seed = req.seed
 
     t0 = time.perf_counter()
-    mem_limit = mem_limit if mem_limit is not None else spec.gpu_mem
+    mem_limit = mem_limit if mem_limit is not None else spec.mem_floor
 
     # stage 1: enumerate the whole search space up front
     confs = [conf for conf in enumerate_confs(spec.n_gpus, w.bs_global,

@@ -18,14 +18,14 @@ bit-identical to the historical 3D implementation.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from ..models.config import ModelConfig
 from . import flops as F
-from .cluster import (ClusterSpec, min_group_bw, min_group_bw_batch,
-                      ring_allreduce_time)
+from .cluster import (ClusterSpec, compute_slowdowns, min_group_bw,
+                      min_group_bw_batch, ring_allreduce_time)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +128,22 @@ def mapping4(conf: Conf, mapping: np.ndarray) -> np.ndarray:
         conf.pp, conf.tp, conf.cp, conf.dp)
 
 
+def stage_work(n_layers: int, pp: int) -> Tuple[float, ...]:
+    """Relative per-stage compute work, normalised to the heaviest stage.
+
+    The contiguous layer split gives the first ``n_layers % pp`` stages
+    ``ceil(n_layers / pp)`` layers and the rest one fewer; the profiled
+    per-microbatch compute (:func:`build_profile`) is priced at the heaviest
+    stage, so entry ``x`` is ``layers_x / ceil(n_layers / pp)`` — all 1.0
+    when ``pp`` divides ``n_layers``.  Only the heterogeneous-compute path
+    consumes this (lighter stages are where slow GPUs hurt least); the
+    homogeneous model keeps the paper's uniform-stage formulation.
+    """
+    full = -(-n_layers // pp)
+    base, rem = n_layers // pp, n_layers % pp
+    return tuple((base + 1 if x < rem else base) / full for x in range(pp))
+
+
 def ring_kv_block_bytes(cfg: ModelConfig, bs_micro: int, seq: int,
                         cp: int) -> float:
     """Bytes of the K+V block one cp rank passes per ring-attention step
@@ -161,18 +177,23 @@ class Profile:
     t_cp_bwd: float = 0.0
     msg_cp: float = 0.0            # bytes of one KV block sent per ring step
     cp_ref_bw: float = 300e9       # bandwidth T_cp was profiled at
+    # --- heterogeneous compute (consumed only for tiered specs) ---
+    # per-stage relative work (:func:`stage_work`); None (legacy direct
+    # constructions) means uniform stages
+    stage_work: Optional[Tuple[float, ...]] = None
 
 
 def _profile_static(w: Workload, spec: ClusterSpec,
-                    conf: Conf) -> Tuple[float, float, float]:
+                    conf: Conf) -> Tuple[float, float, float, tuple]:
     """The :class:`Profile` fields that depend only on ``(pp, tp)``.
 
-    ``stage_params``, ``msg_dp`` and ``tp_ref_bw`` are independent of
-    ``bs_micro`` (and of ``dp``), so :class:`ProfileCache` shares them across
-    every microbatch variant of a parallelism shape.
+    ``stage_params``, ``msg_dp``, ``tp_ref_bw`` and the per-stage work
+    vector are independent of ``bs_micro`` (and of ``dp``), so
+    :class:`ProfileCache` shares them across every microbatch variant of a
+    parallelism shape.
 
     Returns:
-        ``(stage_params, msg_dp, tp_ref_bw)``.
+        ``(stage_params, msg_dp, tp_ref_bw, stage_work)``.
     """
     cfg = w.cfg
     tp_ref_bw = spec.intra_bw if conf.tp <= spec.gpus_per_node \
@@ -181,11 +202,11 @@ def _profile_static(w: Workload, spec: ClusterSpec,
     stage_params = (p_total - 2 * cfg.vocab_size * cfg.d_model) / conf.pp \
         + 2 * cfg.vocab_size * cfg.d_model / min(conf.pp, 2)
     msg_dp = stage_params / conf.tp * w.grad_bytes
-    return stage_params, msg_dp, tp_ref_bw
+    return stage_params, msg_dp, tp_ref_bw, stage_work(cfg.n_layers, conf.pp)
 
 
 def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
-                     static: Tuple[float, float, float]) -> Profile:
+                     static: Tuple[float, float, float, tuple]) -> Profile:
     """The ``(bs_micro, cp)``-dependent remainder of :func:`build_profile`.
 
     Context parallelism shards every per-microbatch quantity over the
@@ -195,7 +216,7 @@ def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
     appears (``cp - 1`` steps per layer, Fujii et al. 2411.06465).
     """
     cfg = w.cfg
-    stage_params, msg_dp, tp_ref_bw = static
+    stage_params, msg_dp, tp_ref_bw, stage_w = static
     layers_stage = -(-cfg.n_layers // conf.pp)
     tokens_mb = conf.bs_micro * w.seq / conf.cp     # per cp-rank tokens
     n_active = F.active_param_count(cfg)
@@ -236,7 +257,7 @@ def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
         msg_cp, t_cp_fwd, t_cp_bwd, cp_ref_bw = 0.0, 0.0, 0.0, tp_ref_bw
     return Profile(c_fwd, c_bwd, t_tp, 2 * t_tp, msg_pp, msg_dp,
                    stage_params, tp_ref_bw, t_cp_fwd, t_cp_bwd, msg_cp,
-                   cp_ref_bw)
+                   cp_ref_bw, stage_w)
 
 
 def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
@@ -278,7 +299,8 @@ class ProfileCache:
     def __init__(self, w: Workload, spec: ClusterSpec):
         self.w = w
         self.spec = spec
-        self._static: Dict[Tuple[int, int], Tuple[float, float, float]] = {}
+        self._static: Dict[Tuple[int, int],
+                           Tuple[float, float, float, tuple]] = {}
         self._full: Dict[Tuple[int, int, int, int], Profile] = {}
 
     def get(self, conf: Conf) -> Profile:
@@ -434,6 +456,11 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
     fwd/bwd link contention, per-op jitter and warmup transients.  With
     ``conf.cp > 1`` every forward/backward op additionally carries the ring
     KV-exchange time of its slowest cp group, evaluated on the true links.
+    On a tiered spec every op plays back at its ranks' *true* speed: the
+    (stage, replica) compute time stretches by the slowest member GPU's
+    :func:`~repro.core.cluster.compute_slowdowns` factor and shrinks by the
+    stage's relative layer work (``prof.stage_work``) — so compute-aware
+    dedication wins are measurable here, not just in the model.
 
     Args:
         conf: parallelism configuration.
@@ -477,6 +504,21 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                           prof.cp_ref_bw / cgbw, 1.0)
         t_cpf = (prof.t_cp_fwd * cscale).reshape(pp, tp, dp).max(axis=1).T
 
+    # per-(replica, stage) compute at each rank's true speed: the slowest
+    # (tp, cp) member sets the stage's GEMM time (the work is evenly
+    # sharded, so everyone waits on it), lighter stages do less work.
+    # Homogeneous specs fill these with the profiled scalars exactly.
+    slow = compute_slowdowns(spec)
+    c_fwd_zs = np.full((dp, pp), prof.c_fwd)
+    c_bwd_zs = np.full((dp, pp), prof.c_bwd)
+    if slow is not None:
+        sw = np.asarray(prof.stage_work if prof.stage_work is not None
+                        else np.ones(pp))
+        stage_slow = slow[m4].reshape(pp, tp * cp, dp).max(axis=1)
+        c_scale = (stage_slow * sw[:, None]).T          # (dp, pp)
+        c_fwd_zs = prof.c_fwd * c_scale
+        c_bwd_zs = prof.c_bwd * c_scale
+
     finish_stage = np.zeros((dp, pp))
     for z in range(dp):
         orders = [_one_f_one_b_order(pp, s, n_mb) for s in range(pp)]
@@ -499,7 +541,7 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                                 break
                             cont = 1.0 + (contention if m >= pp else 0.0)
                             ready = dep + t_pp[z, s - 1] * cont
-                        dur = prof.c_fwd + t_tpf[z, s] + t_cpf[z, s]
+                        dur = c_fwd_zs[z, s] + t_tpf[z, s] + t_cpf[z, s]
                     else:
                         if s == pp - 1:
                             dep = done_f.get((s, m))
@@ -508,7 +550,7 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
                         if dep is None:
                             break
                         ready = dep if s == pp - 1 else dep + t_pp[z, s] * (1 + contention)
-                        dur = prof.c_bwd + 2 * t_tpf[z, s] + 2 * t_cpf[z, s]
+                        dur = c_bwd_zs[z, s] + 2 * t_tpf[z, s] + 2 * t_cpf[z, s]
                     if m == 0:
                         dur *= 1.03          # warmup transient
                     dur *= 1.0 + jitter * rng.standard_normal()

@@ -21,14 +21,17 @@ import math
 import sys
 
 from repro import configs
-from repro.core import (HIGH_END, MID_RANGE, STRATEGIES, TPU_POD, Budget,
+from repro.core import (HIGH_END, MID_RANGE, MID_RANGE_DEGRADED,
+                        MIXED_A100_V100, STRATEGIES, TPU_POD, Budget,
                         ExhaustiveStrategy, MegatronStrategy, Plan, Planner,
                         PlanRequest, PipetteStrategy, SearchSpace, Workload,
                         fit_memory_estimator, profile_bandwidth,
                         true_bandwidth_matrix)
 
 CLUSTERS = {"mid-range": MID_RANGE, "high-end": HIGH_END,
-            "tpu-pod": TPU_POD}
+            "tpu-pod": TPU_POD,
+            "mixed-a100-v100": MIXED_A100_V100,
+            "mid-range-degraded": MID_RANGE_DEGRADED}
 
 
 def _fmt_bytes(x: float) -> str:
@@ -52,6 +55,13 @@ def cmd_plan(args: argparse.Namespace) -> int:
           f"(~{cost_s:.0f}s on a real cluster)", file=sys.stderr)
 
     estimator = None
+    if args.fit_estimator and args.strategy not in ("pipette", "exhaustive"):
+        # the baselines are memory-unaware by design: fitting would burn
+        # minutes and then be silently discarded by the dispatch below
+        print(f"error: --fit-estimator has no effect with "
+              f"--strategy {args.strategy} (memory-unaware baseline); "
+              f"drop the flag or use pipette/exhaustive", file=sys.stderr)
+        return 2
     if args.fit_estimator:
         estimator = fit_memory_estimator(
             [w], spec, fit_nodes=min(2, spec.n_nodes),
@@ -63,7 +73,9 @@ def cmd_plan(args: argparse.Namespace) -> int:
     # choices and the dispatch — only construction args differ per kind
     cls = STRATEGIES[args.strategy]
     if cls in (PipetteStrategy, ExhaustiveStrategy):
-        strategy = cls(estimator=estimator, mem_limit=spec.gpu_mem)
+        # mem_floor == gpu_mem on homogeneous clusters; on tiered ones it
+        # budgets for the tightest device tier
+        strategy = cls(estimator=estimator, mem_limit=spec.mem_floor)
     elif cls is MegatronStrategy:
         # megatron-lm: trial runs happen on the ground-truth links
         strategy = cls(bw_true=true_bandwidth_matrix(spec))
@@ -102,6 +114,12 @@ def cmd_show(args: argparse.Namespace) -> int:
     print(f"budget: sa_seconds={p.budget.sa_seconds} "
           f"sa_iters={p.budget.sa_iters} n_chains={p.budget.n_chains} "
           f"sa_topk={p.budget.sa_topk}")
+    if p.tiers is not None:
+        names = [t["name"] or f"tier{i}"
+                 for i, t in enumerate(p.tiers["tiers"])]
+        counts = [p.tiers["node_tiers"].count(i) for i in range(len(names))]
+        mix = " + ".join(f"{c}x {n}" for n, c in zip(names, counts))
+        print(f"tiers: {mix} (digest sha256:{p.tiers['digest'][:16]}…)")
     if p.estimator is None:
         print("estimator: none (memory-unaware)")
     else:

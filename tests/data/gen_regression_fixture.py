@@ -1,0 +1,88 @@
+"""Regenerate ``homog_regression.json`` — the pre-heterogeneity behaviour pin.
+
+The fixture freezes, bit-for-bit (float hex), what the configurator produced
+for *homogeneous* clusters before per-GPU device tiers existed:
+
+* a MID_RANGE 3D search (ranked confs + latencies + best mapping),
+* the same request with ``max_cp=2`` (4D),
+* ``ground_truth_memory`` over a conf grid,
+* ``pipette_latency`` of a few default mappings.
+
+``tests/test_hetero_regression.py`` replays the same requests and compares
+against this file, guaranteeing the heterogeneous-compute refactor is an
+exact no-op for single-tier/scalar specs.  Regenerate ONLY when an
+intentional model change lands (and say so in the commit):
+
+    PYTHONPATH=src python tests/data/gen_regression_fixture.py
+"""
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import (MID_RANGE, Conf, Workload, configure,
+                        ground_truth_memory, pipette_latency,
+                        profile_bandwidth, build_profile, default_mapping)
+from repro.configs.gpt_paper import GPT_3_1B
+
+OUT = pathlib.Path(__file__).parent / "homog_regression.json"
+
+SEARCH_KW = dict(sa_seconds=60.0, sa_iters=60, sa_topk=4, max_micro=4,
+                 seed=3)
+
+
+def _search_block(max_cp: int) -> dict:
+    spec = MID_RANGE
+    w = Workload(GPT_3_1B, 2048, 256)
+    bw, _ = profile_bandwidth(spec)
+    res = configure(w, spec, bw, max_cp=max_cp, **SEARCH_KW)
+    return {
+        "ranked": [
+            {"conf": [c.conf.pp, c.conf.tp, c.conf.cp, c.conf.dp,
+                      c.conf.bs_micro, c.conf.bs_global],
+             "latency": c.latency.hex()}
+            for c in res.ranked
+        ],
+        "best_mapping": np.asarray(res.best.mapping).reshape(-1).tolist(),
+    }
+
+
+def _memory_block() -> dict:
+    spec = MID_RANGE
+    w = Workload(GPT_3_1B, 2048, 256)
+    out = {}
+    for conf in [Conf(4, 8, 4, 2, 256), Conf(2, 8, 8, 1, 256),
+                 Conf(8, 4, 4, 1, 256), Conf(1, 8, 16, 4, 256),
+                 Conf(4, 4, 4, 2, 256, cp=2), Conf(2, 4, 8, 1, 256, cp=2)]:
+        key = f"{conf.pp},{conf.tp},{conf.cp},{conf.dp},{conf.bs_micro}"
+        out[key] = ground_truth_memory(w, conf, spec).hex()
+    return out
+
+
+def _latency_block() -> dict:
+    spec = MID_RANGE
+    w = Workload(GPT_3_1B, 2048, 256)
+    bw, _ = profile_bandwidth(spec)
+    out = {}
+    for conf in [Conf(4, 8, 4, 2, 256), Conf(8, 4, 4, 1, 256),
+                 Conf(4, 4, 4, 2, 256, cp=2)]:
+        prof = build_profile(w, spec, conf)
+        lat = pipette_latency(conf, default_mapping(conf), bw, prof, spec)
+        key = f"{conf.pp},{conf.tp},{conf.cp},{conf.dp},{conf.bs_micro}"
+        out[key] = lat.hex()
+    return out
+
+
+def main() -> None:
+    fixture = {
+        "search_3d": _search_block(max_cp=1),
+        "search_4d_max_cp2": _search_block(max_cp=2),
+        "ground_truth_memory": _memory_block(),
+        "default_mapping_latency": _latency_block(),
+    }
+    OUT.write_text(json.dumps(fixture, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Heterogeneous-compute cluster specs: construction-time validation,
+per-GPU device views, the seeded mixed-fleet / degraded-host generators,
+and the single-tier degeneration guarantee."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (MID_RANGE, MID_RANGE_DEGRADED, MIXED_A100_V100,
+                        ClusterSpec, DeviceTier, compute_slowdowns,
+                        tier_fingerprint)
+from repro.core.cluster import (A100_TIER, V100_TIER, degraded_host_spec,
+                                mixed_fleet_spec)
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (bad specs fail here, not in the bandwidth
+# generator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw, match", [
+    (dict(n_nodes=0), "n_nodes"),
+    (dict(n_nodes=-3), "n_nodes"),
+    (dict(gpus_per_node=0), "gpus_per_node"),
+    (dict(intra_bw=0.0), "intra_bw"),
+    (dict(inter_bw=-1e9), "inter_bw"),
+    (dict(gpu_flops=0.0), "gpu_flops"),
+    (dict(gpu_mem=-1.0), "gpu_mem"),
+    (dict(efficiency=0.0), "efficiency"),
+    (dict(efficiency=1.5), "efficiency"),
+    (dict(heterogeneity=-0.1), "heterogeneity"),
+    (dict(slow_frac=1.5), "slow_frac"),
+])
+def test_spec_rejects_bad_scalars(kw, match):
+    base = dict(name="bad", n_nodes=2)
+    base.update(kw)
+    with pytest.raises(ValueError, match=match):
+        ClusterSpec(**base)
+
+
+def test_spec_rejects_tier_table_without_assignment():
+    with pytest.raises(ValueError, match="together"):
+        ClusterSpec("bad", 2, tiers=(V100_TIER,))
+    with pytest.raises(ValueError, match="together"):
+        ClusterSpec("bad", 2, node_tiers=(0, 0))
+
+
+def test_spec_rejects_wrong_assignment_length():
+    with pytest.raises(ValueError, match="every node"):
+        ClusterSpec("bad", 3, tiers=(V100_TIER,), node_tiers=(0, 0))
+
+
+def test_spec_rejects_out_of_range_tier_index():
+    with pytest.raises(ValueError, match="out of range"):
+        ClusterSpec("bad", 2, tiers=(V100_TIER,), node_tiers=(0, 1))
+    with pytest.raises(ValueError, match="out of range"):
+        ClusterSpec("bad", 2, tiers=(V100_TIER,), node_tiers=(0, -1))
+
+
+def test_device_tier_rejects_non_positive_fields():
+    with pytest.raises(ValueError, match="DeviceTier"):
+        DeviceTier(flops=0.0, mem=32e9)
+    with pytest.raises(ValueError, match="DeviceTier"):
+        DeviceTier(flops=1e12, mem=-1.0)
+    with pytest.raises(ValueError, match="DeviceTier"):
+        DeviceTier(flops=1e12, mem=32e9, efficiency=0.0)
+
+
+def test_with_nodes_revalidates():
+    with pytest.raises(ValueError, match="n_nodes"):
+        MID_RANGE.with_nodes(0)
+
+
+def test_spec_accepts_list_inputs_and_stays_hashable():
+    s = ClusterSpec("ok", 2, tiers=[V100_TIER], node_tiers=[0, 0])
+    assert isinstance(s.tiers, tuple) and isinstance(s.node_tiers, tuple)
+    hash(s)                                  # frozen + tuple fields
+
+
+# ---------------------------------------------------------------------------
+# per-GPU device views
+# ---------------------------------------------------------------------------
+
+def test_homogeneous_per_gpu_views_match_scalars():
+    s = MID_RANGE
+    assert np.all(s.per_gpu_flops() == s.gpu_flops)
+    assert np.all(s.per_gpu_mem() == s.gpu_mem)
+    assert np.all(s.per_gpu_throughput() == s.gpu_flops * s.efficiency)
+    assert s.mem_floor == s.gpu_mem
+    assert not s.has_tiers
+    assert compute_slowdowns(s) is None
+
+
+def test_tiered_per_gpu_views_follow_node_assignment():
+    s = MIXED_A100_V100
+    flops = s.per_gpu_flops()
+    mem = s.per_gpu_mem()
+    for g in range(s.n_gpus):
+        tier = s.tiers[s.node_tiers[s.node_of(g)]]
+        assert flops[g] == tier.flops
+        assert mem[g] == tier.mem
+        assert s.tier_of(g) == tier
+    assert s.mem_floor == min(A100_TIER.mem, V100_TIER.mem)
+    slow = compute_slowdowns(s)
+    assert slow is not None and slow.shape == (s.n_gpus,)
+    # reference is the fastest (A100) tier: its GPUs sit at exactly 1.0
+    assert slow.min() == 1.0
+    assert slow.max() == pytest.approx(A100_TIER.throughput
+                                       / V100_TIER.throughput)
+
+
+def test_single_tier_spec_degenerates_to_scalar():
+    """A tier table whose only tier matches the reference scalars is
+    indistinguishable from the scalar spec (compute_slowdowns -> None)."""
+    s = ClusterSpec("one", 4, tiers=(DeviceTier(MID_RANGE.gpu_flops,
+                                                MID_RANGE.gpu_mem,
+                                                MID_RANGE.efficiency),),
+                    node_tiers=(0,) * 4)
+    assert compute_slowdowns(s) is None
+    assert s.mem_floor == MID_RANGE.gpu_mem
+
+
+def test_with_nodes_keeps_tier_pattern():
+    s = MIXED_A100_V100
+    shrunk = s.with_nodes(5)
+    assert shrunk.node_tiers == s.node_tiers[:5]
+    grown = s.with_nodes(20)
+    assert grown.node_tiers[:16] == s.node_tiers
+    assert grown.node_tiers[16:] == s.node_tiers[:4]
+    assert MID_RANGE.with_nodes(4).node_tiers == ()
+
+
+# ---------------------------------------------------------------------------
+# seeded generators
+# ---------------------------------------------------------------------------
+
+def test_mixed_fleet_spec_counts_and_determinism():
+    s = mixed_fleet_spec("m", 10, (A100_TIER, V100_TIER), (0.5, 0.5),
+                         seed=3)
+    assert s.node_tiers.count(0) == 5 and s.node_tiers.count(1) == 5
+    assert s == mixed_fleet_spec("m", 10, (A100_TIER, V100_TIER),
+                                 (0.5, 0.5), seed=3)
+    other = mixed_fleet_spec("m", 10, (A100_TIER, V100_TIER), (0.5, 0.5),
+                             seed=4)
+    assert other.node_tiers != s.node_tiers       # seeded shuffle
+    # reference scalars pinned to the fastest tier => slowdowns >= 1
+    assert s.gpu_flops == A100_TIER.flops
+    assert compute_slowdowns(s).min() >= 1.0
+
+
+def test_mixed_fleet_spec_rejects_bad_fractions():
+    with pytest.raises(ValueError, match="fractions"):
+        mixed_fleet_spec("m", 4, (A100_TIER, V100_TIER), (0.5,))
+    with pytest.raises(ValueError, match="at least one tier"):
+        mixed_fleet_spec("m", 4, ())
+    with pytest.raises(ValueError, match="positive"):
+        mixed_fleet_spec("m", 4, (A100_TIER, V100_TIER), (0.0, 0.0))
+
+
+def test_mixed_fleet_zero_fraction_tier_stays_absent():
+    """Remainder nodes must never land on a tier the caller excluded with
+    fraction 0.0 (3 nodes over (0, 0.5, 0.5) leaves a remainder)."""
+    third = DeviceTier(50e12, 16e9, 0.4, name="t3")
+    s = mixed_fleet_spec("m", 3, (A100_TIER, V100_TIER, third),
+                         (0.0, 0.5, 0.5), seed=1)
+    assert 0 not in s.node_tiers
+    assert s.node_tiers.count(1) + s.node_tiers.count(2) == 3
+
+
+def test_degraded_host_spec():
+    s = degraded_host_spec(MID_RANGE, degraded_frac=0.25, flops_factor=0.5,
+                           seed=5)
+    assert s.node_tiers.count(1) == 4             # 25% of 16 nodes
+    healthy, degraded = s.tiers
+    assert healthy.flops == MID_RANGE.gpu_flops
+    assert degraded.flops == MID_RANGE.gpu_flops * 0.5
+    assert s == degraded_host_spec(MID_RANGE, degraded_frac=0.25,
+                                   flops_factor=0.5, seed=5)
+    slow = compute_slowdowns(s)
+    assert set(np.unique(slow)) == {1.0, 2.0}
+    with pytest.raises(ValueError, match="homogeneous base"):
+        degraded_host_spec(s)
+    with pytest.raises(ValueError, match="degraded_frac"):
+        degraded_host_spec(MID_RANGE, degraded_frac=0.0)
+    assert MID_RANGE_DEGRADED.node_tiers.count(1) == 4
+
+
+# ---------------------------------------------------------------------------
+# tier provenance digest
+# ---------------------------------------------------------------------------
+
+def test_tier_fingerprint():
+    assert tier_fingerprint(MID_RANGE) is None
+    d = tier_fingerprint(MIXED_A100_V100)
+    assert isinstance(d, str) and len(d) == 64
+    assert d == tier_fingerprint(MIXED_A100_V100)
+    # any change to the table or the assignment changes the digest
+    moved = dataclasses.replace(
+        MIXED_A100_V100,
+        node_tiers=MIXED_A100_V100.node_tiers[::-1])
+    assert tier_fingerprint(moved) != d
+    retiered = dataclasses.replace(
+        MIXED_A100_V100,
+        tiers=(A100_TIER, dataclasses.replace(V100_TIER, mem=16e9)))
+    assert tier_fingerprint(retiered) != d

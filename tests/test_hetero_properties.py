@@ -1,0 +1,103 @@
+"""Property tests (hypothesis) for heterogeneous-compute specs.
+
+The load-bearing property: a *single-tier* spec whose tier equals the
+reference scalars is bit-exact with the plain scalar spec across random
+configurations — latency, memory ground truth, and dedication-engine
+scores.  This is the degeneration guarantee the whole refactor rests on.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (MID_RANGE, ClusterSpec, Conf, DeviceTier, Workload,
+                        build_profile, ground_truth_memory, pipette_latency,
+                        profile_bandwidth)
+from repro.core.cluster import compute_slowdowns
+from repro.core.dedication import DedicationEngine
+from repro.models.config import ModelConfig
+
+hyp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hyp.given, hyp.settings
+
+GPT = ModelConfig(name="g", family="dense", n_layers=24, d_model=1024,
+                  n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+
+
+def _single_tier(spec: ClusterSpec) -> ClusterSpec:
+    """The tiered twin of a scalar spec: one tier, equal to the scalars."""
+    return dataclasses.replace(
+        spec,
+        tiers=(DeviceTier(spec.gpu_flops, spec.gpu_mem, spec.efficiency),),
+        node_tiers=(0,) * spec.n_nodes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(pp=st.sampled_from([1, 2, 4]), tp=st.sampled_from([1, 2, 4]),
+       dp=st.sampled_from([1, 2]), mb=st.sampled_from([1, 2, 4]),
+       perm_seed=st.integers(0, 2 ** 16))
+def test_single_tier_spec_bit_exact_vs_scalar(pp, tp, dp, mb, perm_seed):
+    n_gpus = pp * tp * dp
+    scalar = MID_RANGE.with_nodes(-(-n_gpus // MID_RANGE.gpus_per_node))
+    tiered = _single_tier(scalar)
+    assert compute_slowdowns(tiered) is None
+
+    conf = Conf(pp, tp, dp, mb, 16 * dp * mb)
+    w = Workload(GPT, 512, conf.bs_global)
+    prof_s = build_profile(w, scalar, conf)
+    prof_t = build_profile(w, tiered, conf)
+    assert prof_s == prof_t
+
+    assert ground_truth_memory(w, conf, scalar).hex() == \
+        ground_truth_memory(w, conf, tiered).hex()
+
+    bw, _ = profile_bandwidth(scalar)
+    perm = np.random.default_rng(perm_seed).permutation(scalar.n_gpus)
+    mapping = perm[:n_gpus].reshape(conf.pp, conf.dp,
+                                    conf.tp).transpose(0, 2, 1)
+    lat_s = pipette_latency(conf, mapping, bw, prof_s, scalar)
+    lat_t = pipette_latency(conf, mapping, bw, prof_t, tiered)
+    assert lat_s.hex() == lat_t.hex()
+
+
+@settings(max_examples=15, deadline=None)
+@given(pp=st.sampled_from([2, 4]), tp=st.sampled_from([1, 2]),
+       mb=st.sampled_from([1, 2]), perm_seed=st.integers(0, 2 ** 16))
+def test_single_tier_engine_scores_bit_exact(pp, tp, mb, perm_seed):
+    dp = 2
+    n_gpus = pp * tp * dp
+    spec = MID_RANGE.with_nodes(max(1, -(-n_gpus // MID_RANGE.gpus_per_node)))
+    tiered = _single_tier(spec)
+    conf = Conf(pp, tp, dp, mb, 16 * dp * mb)
+    w = Workload(GPT, 512, conf.bs_global)
+    prof = build_profile(w, spec, conf)
+    assert prof == build_profile(w, tiered, conf)
+    bw, _ = profile_bandwidth(spec)
+    # permutation over the conf's worker count, drawn from the cluster GPUs
+    perm = np.random.default_rng(perm_seed).permutation(
+        spec.n_gpus)[:n_gpus]
+    eng_s = DedicationEngine(conf, bw, prof, spec)
+    eng_t = DedicationEngine(conf, bw, prof, tiered)
+    assert eng_s.score(perm).hex() == eng_t.score(perm).hex()
+
+
+@settings(max_examples=20, deadline=None)
+@given(factor=st.floats(0.2, 0.9), frac_idx=st.integers(1, 3),
+       seed=st.integers(0, 99))
+def test_slower_tier_never_speeds_up_the_model(factor, frac_idx, seed):
+    """Degrading some hosts can only increase (or keep) estimated latency
+    vs the healthy scalar spec — never decrease it."""
+    from repro.core.cluster import degraded_host_spec
+    base = MID_RANGE.with_nodes(4)
+    spec = degraded_host_spec(base, degraded_frac=frac_idx / 4,
+                              flops_factor=factor, seed=seed)
+    conf = Conf(4, 8, 1, 2, 32)
+    w = Workload(GPT, 512, 32)
+    prof = build_profile(w, base, conf)
+    assert prof == build_profile(w, spec, conf)   # same reference profile
+    bw, _ = profile_bandwidth(base)
+    from repro.core import default_mapping
+    m = default_mapping(conf)
+    assert pipette_latency(conf, m, bw, prof, spec) >= \
+        pipette_latency(conf, m, bw, prof, base)

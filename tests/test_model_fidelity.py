@@ -1,0 +1,73 @@
+"""Model-fidelity regression: the Eq. 3-6 latency model vs the
+discrete-event simulator on a pinned, seeded scenario grid.
+
+Each scenario draws a seeded sample of schedulable configurations, scores
+their default mappings with :func:`pipette_latency` on the *measured*
+matrix, plays them back in the simulator on the *true* matrix, and asserts
+the MAPE stays under a checked-in threshold.  The grid covers the paper's
+3D space, the 4D (cp > 1) extension, and mixed-tier (heterogeneous
+compute) clusters — so a future model edit that silently degrades any of
+the three surfaces fails here, with the measured number in the message.
+
+Thresholds carry ~2x headroom over the values measured when they were
+pinned (1.6 / 1.0 / 3.5 / 2.6 / 7.4 %); everything is deterministic given
+the seeds, so a breach means the model or simulator actually moved.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (MID_RANGE, Workload, build_profile, default_mapping,
+                        pipette_latency, profile_bandwidth,
+                        true_bandwidth_matrix)
+from repro.core.cluster import A100_TIER, V100_TIER, mixed_fleet_spec
+from repro.core.memory import enumerate_confs, mape
+from repro.core.simulator import measure
+from repro.models.config import ModelConfig
+
+GPT = ModelConfig(name="g24", family="dense", n_layers=24, d_model=1024,
+                  n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+
+MIXED_16x1 = mixed_fleet_spec("mixed-16x1", 16, (A100_TIER, V100_TIER),
+                              (0.5, 0.5), gpus_per_node=1, seed=47)
+MIXED_16x4 = mixed_fleet_spec("mixed-16x4", 16, (A100_TIER, V100_TIER),
+                              (0.5, 0.5), gpus_per_node=4, seed=47)
+
+#: (id, spec, workload, max_cp, require_cp, MAPE threshold %)
+SCENARIOS = [
+    ("mid-range-3d", MID_RANGE.with_nodes(2), Workload(GPT, 2048, 64),
+     1, False, 5.0),
+    ("mid-range-4d-cp", MID_RANGE.with_nodes(2), Workload(GPT, 2048, 64),
+     4, True, 5.0),
+    ("mixed-16x1-tiered", MIXED_16x1, Workload(GPT, 2048, 32),
+     1, False, 8.0),
+    ("mixed-16x4-tiered", MIXED_16x4, Workload(GPT, 2048, 64),
+     1, False, 8.0),
+    ("mixed-16x4-4d-cp", MIXED_16x4, Workload(GPT, 2048, 64),
+     4, True, 15.0),
+]
+
+
+@pytest.mark.parametrize(
+    "spec, w, max_cp, require_cp, threshold",
+    [s[1:] for s in SCENARIOS], ids=[s[0] for s in SCENARIOS])
+def test_latency_model_mape_vs_simulator(spec, w, max_cp, require_cp,
+                                         threshold):
+    bw_meas, _ = profile_bandwidth(spec)
+    bw_true = true_bandwidth_matrix(spec)
+    confs = [c for c in enumerate_confs(spec.n_gpus, w.bs_global,
+                                        n_layers=w.cfg.n_layers,
+                                        max_cp=max_cp, seq=w.seq)
+             if c.bs_micro <= 4 and (not require_cp or c.cp > 1)]
+    assert len(confs) >= 8, "scenario grid too small to be meaningful"
+    rng = np.random.default_rng(0)
+    sel = [confs[i] for i in rng.choice(len(confs), size=10, replace=False)]
+    preds, sims = [], []
+    for conf in sel:
+        prof = build_profile(w, spec, conf)
+        m = default_mapping(conf)
+        preds.append(pipette_latency(conf, m, bw_meas, prof, spec))
+        sims.append(measure(conf, m, w, spec, bw_true, seed=3))
+    err = mape(preds, sims)
+    assert err <= threshold, (
+        f"latency-model MAPE {err:.2f}% exceeds the pinned {threshold}% "
+        f"on {spec.name}: the model drifted from the simulator")

@@ -1,0 +1,105 @@
+"""Golden-file contract for the serialized Plan schema (version 2).
+
+Three locks:
+
+1. the checked-in fixture (``tests/data/golden_plan_v2.json``) loads and
+   re-serializes **byte-for-byte** — the wire format cannot drift silently;
+2. regenerating the same request live reproduces the fixture bytes —
+   plans are deterministic artifacts, not process-local snapshots;
+3. the serialized *shape* (every key path) is pinned: adding/removing/
+   renaming any field fails here until ``PLAN_SCHEMA_VERSION`` is bumped
+   (and the fixture regenerated via ``tests/data/gen_golden_plan.py``).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import Plan, profile_bandwidth
+from repro.core.plan import PLAN_SCHEMA_VERSION
+
+GOLDEN = Path(__file__).parent / "data" / "golden_plan_v2.json"
+
+#: Every key path of the version-2 schema.  ``[]`` marks list elements.
+#: CHANGING THIS SET == CHANGING THE WIRE FORMAT: bump PLAN_SCHEMA_VERSION,
+#: regenerate the fixture, and rename it (golden_plan_v<N>.json).
+SCHEMA_V2_PATHS = frozenset({
+    "best.conf.bs_global", "best.conf.bs_micro", "best.conf.cp",
+    "best.conf.dp", "best.conf.pp", "best.conf.tp", "best.latency",
+    "best.mapping.data[]", "best.mapping.dtype", "best.mapping.shape[]",
+    "best.mem_pred",
+    "overhead.n_candidates", "overhead.n_enumerated",
+    "provenance.bs_global", "provenance.budget.n_chains",
+    "provenance.budget.sa_iters", "provenance.budget.sa_seconds",
+    "provenance.budget.sa_topk", "provenance.bw_digest",
+    "provenance.cluster", "provenance.estimator", "provenance.model",
+    "provenance.n_gpus", "provenance.seed", "provenance.seq",
+    "provenance.space.fixed_micro", "provenance.space.max_cp",
+    "provenance.space.max_micro", "provenance.space.max_tp",
+    "provenance.tiers.digest", "provenance.tiers.node_tiers[]",
+    "provenance.tiers.tiers[].efficiency", "provenance.tiers.tiers[].flops",
+    "provenance.tiers.tiers[].mem", "provenance.tiers.tiers[].name",
+    "ranked[].conf.bs_global", "ranked[].conf.bs_micro", "ranked[].conf.cp",
+    "ranked[].conf.dp", "ranked[].conf.pp", "ranked[].conf.tp",
+    "ranked[].latency", "ranked[].mapping.data[]", "ranked[].mapping.dtype",
+    "ranked[].mapping.shape[]", "ranked[].mem_pred",
+    "strategy", "version",
+})
+
+
+def _paths(o, pre=""):
+    out = set()
+    if isinstance(o, dict):
+        for k, v in o.items():
+            out |= _paths(v, f"{pre}.{k}" if pre else k)
+    elif isinstance(o, list):
+        for v in o[:1]:
+            out |= _paths(v, pre + "[]")
+    else:
+        out.add(pre)
+    return out
+
+
+def test_golden_plan_loads_and_roundtrips_byte_for_byte():
+    text = GOLDEN.read_text()
+    plan = Plan.load(GOLDEN)
+    assert plan.to_json() == text
+    assert plan.feasible
+    # tier provenance (the v2 addition) is populated in the fixture
+    tiers = plan.provenance.tiers
+    assert tiers is not None and len(tiers["digest"]) == 64
+    assert {t["name"] for t in tiers["tiers"]} == {"a100", "v100"}
+
+
+def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
+    """The same request regenerated today must produce the exact fixture
+    bytes — the Plan artifact is deterministic end to end."""
+    from tests.data.gen_golden_plan import REQ, SPEC
+    from repro.core import Planner, PipetteStrategy
+
+    bw, _ = profile_bandwidth(SPEC)
+    plan = Planner(PipetteStrategy()).plan(REQ, bw)
+    assert plan.to_json() == GOLDEN.read_text()
+
+
+def test_schema_version_must_bump_on_shape_change():
+    live = _paths(json.loads(GOLDEN.read_text()))
+    if PLAN_SCHEMA_VERSION == 2:
+        assert live == SCHEMA_V2_PATHS, (
+            "the serialized Plan shape changed but PLAN_SCHEMA_VERSION is "
+            "still 2 — bump it, regenerate tests/data/golden_plan_v2.json "
+            "under the new name, and update SCHEMA_V2_PATHS\n"
+            f"added: {sorted(live - SCHEMA_V2_PATHS)}\n"
+            f"removed: {sorted(SCHEMA_V2_PATHS - live)}")
+    else:
+        pytest.fail(
+            "PLAN_SCHEMA_VERSION moved past 2: retire this guard by "
+            "pinning the new shape and fixture (see gen_golden_plan.py)")
+
+
+def test_loader_rejects_other_schema_versions():
+    d = json.loads(GOLDEN.read_text())
+    for bad in (1, PLAN_SCHEMA_VERSION + 1, None):
+        d["version"] = bad
+        with pytest.raises(ValueError, match="schema version"):
+            Plan.from_json_dict(d)
