@@ -27,10 +27,36 @@ discrete-event simulator at each rank's true speed — the heterogeneous-
 compute headline (aware must be strictly faster).
 
 Acceptance target (ISSUE 2): >= 5x on the enumerate+prune phase.
+
+``--huge`` replaces all of the above with the 10k-GPU scaling curve
+(ISSUE 6): full 4D plans of a seeded mixed A100/V100 fleet at 1k / 2k /
+5k / 10k GPUs (``--quick``: 1k + 2k only, the CI smoke size), each size
+planned by both SA backends of the unified core.  Per size it records the
+plan wall-clock (numpy; jax cold; jax warm — second run with the
+persistent XLA compilation cache populated), verifies the two backends
+produced bit-identical plans, and measures full-re-score throughput
+(``DedicationEngine.score`` loop vs the vmapped
+``JaxDedicationEngine.score_batch``, steady state).  Gates, both fatal
+(exit code 1):
+
+* at every size >= 1024 GPUs the jitted batch scorer must not be slower
+  than the NumPy engine at full re-scores (the vmapped core must earn its
+  dispatch; the *plan*-level wall-clock is recorded un-gated — the
+  incremental delta-scoring NumPy executor is expected to stay the better
+  single-core-CPU choice, while the jitted path is the batched-rescore /
+  accelerator story);
+* when the 10240-GPU size runs, its (numpy-backend) plan must finish
+  under ``--limit-s`` seconds (default 10 — the ROADMAP "plan a 10k-GPU
+  cluster in seconds" target).
+
+``--json PATH`` writes the machine-readable curve (the CI artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -187,19 +213,211 @@ def bench_hetero_dedication(*, quick: bool):
     return sim_aware < sim_blind
 
 
+# --------------------------------------------------------------------------
+# --huge: the 10k-GPU scaling curve (ISSUE 6)
+# --------------------------------------------------------------------------
+
+#: 40 transformer layers so pipeline degrees with a factor of 5 are open
+#: (10240 = 2^11 * 5 forces pp in {5, 10, 20, 40} once tp and dp take the
+#: powers of two) — a GPT-13B-like shape.
+M40 = ModelConfig(name="m40-13b", family="dense", n_layers=40, d_model=5120,
+                  n_heads=40, n_kv_heads=40, d_ff=20480, vocab_size=32000)
+
+HUGE_SIZES = (1024, 2048, 5120, 10240)
+HUGE_QUICK_SIZES = (1024, 2048)
+HUGE_BS_GLOBAL = 2048
+RESCORE_BATCH = 16
+
+
+def _huge_spec(n_gpus: int):
+    return mixed_fleet_spec(f"huge-a100-v100-{n_gpus // 8}x8", n_gpus // 8,
+                            (A100_TIER, V100_TIER), (0.5, 0.5),
+                            gpus_per_node=8, seed=1234)
+
+
+def _huge_plan(w, spec, bw, backend: str, *, sa_iters: int, n_chains: int):
+    """One full 4D plan through the declarative API; returns
+    ``(plan, wall_s)``.  Iteration-bound budget (the wall-clock guard can
+    never bite) so numpy and jax runs are byte-comparable."""
+    from repro.core import (Budget, Planner, PlanRequest, PipetteStrategy,
+                            SearchSpace)
+    req = PlanRequest(
+        workload=w, spec=spec,
+        space=SearchSpace(max_tp=8, max_cp=2, fixed_micro=1),
+        budget=Budget(sa_seconds=3600.0, sa_iters=sa_iters,
+                      n_chains=n_chains, sa_topk=2, backend=backend),
+        seed=7)
+    t0 = time.perf_counter()
+    plan = Planner(PipetteStrategy()).plan(req, bw)
+    return plan, time.perf_counter() - t0
+
+
+def _bench_rescore(w, spec, bw, conf):
+    """Steady-state full-re-score throughput of both engines on ``conf``:
+    a Python loop of ``DedicationEngine.score`` vs one vmapped
+    ``JaxDedicationEngine.score_batch`` dispatch over the same random
+    permutations.  Returns ``(numpy_sps, jax_sps, jax_compile_s)`` in
+    scores/second; asserts the two engines agree bitwise."""
+    from repro.core import DedicationEngine, PairCache, build_profile
+    from repro.core.jax_engine import JaxDedicationEngine
+    prof = build_profile(w, spec, conf)
+    pairs = PairCache.build(bw, spec.gpus_per_node)
+    eng = DedicationEngine(conf, bw, prof, spec, pairs=pairs)
+    jeng = JaxDedicationEngine([conf], [prof], bw, spec, pairs=pairs)
+    rng = np.random.default_rng(0)
+    perms = np.stack([rng.permutation(conf.n_gpus)
+                      for _ in range(RESCORE_BATCH)])
+    t_np = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        np_vals = [eng.score(p) for p in perms]
+        dt = time.perf_counter() - t0
+        t_np = dt if t_np is None else min(t_np, dt)
+    t0 = time.perf_counter()
+    jax_vals = jeng.score_batch(perms)          # cold: pays the compile
+    compile_s = time.perf_counter() - t0
+    t_jx = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax_vals = jeng.score_batch(perms)
+        dt = time.perf_counter() - t0
+        t_jx = dt if t_jx is None else min(t_jx, dt)
+    assert all(float(a).hex() == float(b).hex()
+               for a, b in zip(np_vals, jax_vals)), \
+        "jax batch re-score diverged from the NumPy engine"
+    return RESCORE_BATCH / t_np, RESCORE_BATCH / t_jx, compile_s
+
+
+def bench_huge(args) -> None:
+    """The ISSUE 6 scaling curve + gates; writes the ``--json`` artifact."""
+    import jax
+    cache_dir = args.jax_cache_dir or os.path.join(
+        tempfile.gettempdir(), "repro-jax-cache")
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+    sizes = [int(s) for s in args.sizes.split(",")] if args.sizes else \
+        list(HUGE_QUICK_SIZES if args.quick else HUGE_SIZES)
+    w = Workload(M40, SEQ, HUGE_BS_GLOBAL)
+    failures: list[str] = []
+    curve = []
+    print(f"# --huge: {M40.name} seq={SEQ} bs_global={HUGE_BS_GLOBAL}, "
+          f"mixed A100/V100 fleet, sa_iters={args.sa_iters} "
+          f"n_chains={args.chains} sa_topk=2")
+    print("n_gpus,bw_profile_s,numpy_plan_s,jax_cold_plan_s,"
+          "jax_warm_plan_s,numpy_sa_s,jax_warm_sa_s,numpy_rescore_per_s,"
+          "jax_rescore_per_s,latency_s,conf")
+    for n in sizes:
+        spec = _huge_spec(n)
+        t0 = time.perf_counter()
+        bw, _ = profile_bandwidth(spec)
+        bw_s = time.perf_counter() - t0
+        np_plan, np_s = _huge_plan(w, spec, bw, "numpy",
+                                   sa_iters=args.sa_iters,
+                                   n_chains=args.chains)
+        jx_plan, jx_cold_s = _huge_plan(w, spec, bw, "jax",
+                                        sa_iters=args.sa_iters,
+                                        n_chains=args.chains)
+        jx_plan2, jx_warm_s = _huge_plan(w, spec, bw, "jax",
+                                         sa_iters=args.sa_iters,
+                                         n_chains=args.chains)
+        if (np_plan.conf != jx_plan.conf
+                or float(np_plan.latency).hex()
+                != float(jx_plan.latency).hex()
+                or float(jx_plan2.latency).hex()
+                != float(jx_plan.latency).hex()):
+            failures.append(f"n={n}: backends disagree "
+                            f"(numpy {np_plan.conf} {np_plan.latency!r} vs "
+                            f"jax {jx_plan.conf} {jx_plan.latency!r})")
+        np_sps, jx_sps, compile_s = _bench_rescore(w, spec, bw,
+                                                   np_plan.conf)
+        c = np_plan.conf
+        cstr = f"pp{c.pp}.tp{c.tp}.cp{c.cp}.dp{c.dp}"
+        print(f"{n},{bw_s:.2f},{np_s:.2f},{jx_cold_s:.2f},{jx_warm_s:.2f},"
+              f"{np_plan.overhead.sa_s:.2f},{jx_plan2.overhead.sa_s:.2f},"
+              f"{np_sps:.1f},{jx_sps:.1f},{np_plan.latency:.3f},{cstr}")
+        curve.append({
+            "n_gpus": n, "n_nodes": spec.n_nodes,
+            "bw_profile_s": round(bw_s, 3),
+            "numpy": {"plan_s": round(np_s, 3),
+                      "sa_s": round(np_plan.overhead.sa_s, 3),
+                      "rescore_per_s": round(np_sps, 1)},
+            "jax": {"cold_plan_s": round(jx_cold_s, 3),
+                    "warm_plan_s": round(jx_warm_s, 3),
+                    "warm_sa_s": round(jx_plan2.overhead.sa_s, 3),
+                    "rescore_per_s": round(jx_sps, 1),
+                    "rescore_compile_s": round(compile_s, 3)},
+            "latency_s": float(np_plan.latency), "conf": cstr,
+            "n_enumerated": np_plan.overhead.n_enumerated,
+        })
+        # gate 1: the jitted batch scorer must not be slower than the
+        # NumPy engine at full re-scores from 1k GPUs up
+        if n >= 1024 and jx_sps < np_sps:
+            failures.append(
+                f"n={n}: jitted re-score slower than NumPy "
+                f"({jx_sps:.1f} vs {np_sps:.1f} scores/s)")
+        # gate 2: the 10k plan must land inside the ROADMAP budget
+        if n >= 10240 and np_s > args.limit_s:
+            failures.append(f"n={n}: plan took {np_s:.2f}s "
+                            f"(limit {args.limit_s:.0f}s)")
+
+    artifact = {
+        "bench": "huge-scaling-curve", "model": M40.name, "seq": SEQ,
+        "bs_global": HUGE_BS_GLOBAL, "sa_iters": args.sa_iters,
+        "n_chains": args.chains, "sa_topk": 2, "seed": 7,
+        "limit_s": args.limit_s, "sizes": sizes, "curve": curve,
+        "gate_failures": failures,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# artifact -> {args.json}")
+    if failures:
+        raise SystemExit("--huge gate failures:\n  "
+                         + "\n  ".join(failures))
+    print(f"# gates PASS (jitted re-score >= NumPy at every size; "
+          f"10k plan limit {args.limit_s:.0f}s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=16,
                     help="cluster size in 8-GPU nodes (default 16)")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke mode: small estimator, tiny SA budget")
+                    help="CI smoke mode: small estimator, tiny SA budget "
+                         "(with --huge: the 1k+2k curve only)")
     ap.add_argument("--max-cp", type=int, default=1,
                     help="open the 4D context-parallel axis up to this "
                          "degree (default 1 = the 3D space)")
     ap.add_argument("--mixed-tier", action="store_true",
                     help="run on the seeded mixed A100/V100 fleet and "
                          "report compute-aware vs compute-blind dedication")
+    ap.add_argument("--huge", action="store_true",
+                    help="run the 10k-GPU scaling curve instead of phases "
+                         "A-C (see module docstring)")
+    ap.add_argument("--sizes", default=None,
+                    help="with --huge: comma-separated GPU counts "
+                         "overriding the default curve")
+    ap.add_argument("--sa-iters", type=int, default=200,
+                    help="with --huge: SA refinement iterations per "
+                         "candidate (default 200 — islands make the coarse "
+                         "solution strong, refinement is a polish)")
+    ap.add_argument("--chains", type=int, default=4,
+                    help="with --huge: SA chains per candidate (default 4)")
+    ap.add_argument("--limit-s", type=float, default=10.0,
+                    help="with --huge: wall-clock budget for the 10k-GPU "
+                         "plan (default 10s)")
+    ap.add_argument("--json", default=None,
+                    help="with --huge: write the scaling-curve artifact "
+                         "to this path")
+    ap.add_argument("--jax-cache-dir", default=None,
+                    help="with --huge: persistent XLA compilation cache "
+                         "directory (default: a tempdir location)")
     args = ap.parse_args()
+
+    if args.huge:
+        bench_huge(args)
+        return
 
     if args.mixed_tier:
         spec = mixed_fleet_spec("mixed-a100-v100", args.nodes,

@@ -35,8 +35,11 @@ from .latency import (amp_latency, default_mapping_latencies, pipette_latency,
                       pipette_latency_ref, varuna_latency)
 from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
                      fit_memory_estimator, ground_truth_memory, mape)
-from .dedication import (DedicationEngine, GroupIndex, SAResult, anneal,
-                         anneal_multistart, perm_to_mapping)
+from .dedication import (DedicationEngine, GroupIndex, PairCache, SAResult,
+                         anneal, anneal_multistart, perm_to_mapping)
+from .annealing import (MovePlan, build_islands, coarse_assign,
+                        coarse_orderings, dedicate_candidates,
+                        make_move_plan)
 from .search import Candidate, Overhead, SearchResult, configure, run_search
 from .baselines import amp_configure, mlm_configure, varuna_configure
 from .plan import (STRATEGIES, AMPStrategy, Budget, ExhaustiveStrategy,

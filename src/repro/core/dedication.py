@@ -199,6 +199,55 @@ class GroupIndex:
                           pos_dp0, cp, pos_cp, cp_group_of)
 
 
+@dataclass(frozen=True)
+class PairCache:
+    """Configuration-independent GPU-pair matrices shared across engines.
+
+    All ``(G, G)`` tensors an engine gathers from depend only on the
+    profiled bandwidth matrix and the node width — never on the candidate
+    configuration — so one instance serves every engine of a search (every
+    microbatch/shape variant, and the JAX engine's host-side mirror).  At
+    10k GPUs each matrix is ~800 MB; building them once instead of per
+    candidate is the difference between seconds and minutes of planning
+    time.
+
+    Attributes:
+        bw: the bandwidth matrix as contiguous float64 (the canonical copy
+            every sharing engine gathers from).
+        bw_noself: ``bw`` with the diagonal forced to ``inf`` (masks
+            self-links out of group-min reductions).
+        sym_intra: ``min(bw[i,j], bw[j,i])`` on distinct same-node pairs,
+            ``inf`` elsewhere — finite exactly where the hierarchical
+            all-reduce intra-node term applies.
+        gpus_per_node: node width the same-node blocks were built for.
+    """
+    bw: np.ndarray
+    bw_noself: np.ndarray
+    sym_intra: np.ndarray
+    gpus_per_node: int
+
+    @classmethod
+    def build(cls, bw: np.ndarray, gpus_per_node: int) -> "PairCache":
+        """Build the shared matrices with O(G^2) *memory passes*, not
+        O(G^2) boolean-mask algebra: ``bw_noself`` is a copy plus a
+        diagonal fill, and ``sym_intra`` only ever has finite values in
+        the per-node diagonal blocks, so it is an ``inf`` canvas with
+        ``n_nodes`` tiny ``gpn x gpn`` block writes.  Values are
+        bit-identical to the historical full-matrix ``np.where`` /
+        transpose construction."""
+        bw64 = np.ascontiguousarray(bw, dtype=float)
+        g = bw64.shape[0]
+        bw_noself = bw64.copy()
+        np.fill_diagonal(bw_noself, np.inf)
+        sym_intra = np.full((g, g), np.inf)
+        for a in range(0, g, gpus_per_node):
+            b = min(a + gpus_per_node, g)
+            blk = np.minimum(bw64[a:b, a:b], bw64[a:b, a:b].T)
+            np.fill_diagonal(blk, np.inf)
+            sym_intra[a:b, a:b] = blk
+        return cls(bw64, bw_noself, sym_intra, gpus_per_node)
+
+
 class DedicationEngine:
     """Vectorized pipette-latency scorer with incremental move re-scoring.
 
@@ -223,13 +272,13 @@ class DedicationEngine:
 
     def __init__(self, conf: Conf, bw: np.ndarray, prof: Profile,
                  spec: ClusterSpec, index: Optional[GroupIndex] = None,
-                 compute_aware: bool = True):
+                 compute_aware: bool = True,
+                 pairs: Optional[PairCache] = None):
         if index is not None and \
                 (index.pp, index.tp, index.cp, index.dp) != \
                 (conf.pp, conf.tp, conf.cp, conf.dp):
             raise ValueError("GroupIndex shape mismatch")
         self.conf = conf
-        self.bw = np.asarray(bw, dtype=float)
         self.prof = prof
         self.spec = spec
         self.idx = index if index is not None else GroupIndex.build(conf)
@@ -239,25 +288,25 @@ class DedicationEngine:
         # specs: the ablation/baseline that prices every GPU at reference
         # speed (the comparison point for the compute-aware win).
         self._slow = compute_slowdowns(spec) if compute_aware else None
-        # Move-loop constants, built once instead of per proposal.  All are
-        # properties of GPU *pairs*, so group gathers pull them directly:
-        #   _bw_noself  — bw with the self-link set to inf (min_group_bw mask)
-        #   _bw_intra   — bw restricted to distinct same-node pairs, else inf
-        #   _hop_cost   — 2 * msg_pp / bw, the per-hop pipeline term
+        # Pair matrices (the only O(G^2) state): shared via ``pairs`` when
+        # the caller scores many candidates against one fleet, else built
+        # here.  The cache must have been built from this same ``bw`` and
+        # node width — ``dedicate_candidates`` owns that invariant.
+        if pairs is None:
+            pairs = PairCache.build(bw, spec.gpus_per_node)
+        elif pairs.gpus_per_node != spec.gpus_per_node or \
+                pairs.bw.shape != np.shape(bw):
+            raise ValueError("PairCache does not match bw/spec")
+        self.bw = pairs.bw
+        self._bw_noself = pairs.bw_noself
+        self._sym_intra = pairs.sym_intra
+        # Per-conf move-loop constants (all O(dp), built per engine):
+        #   _hopf — 2 * msg_pp, the per-hop pipeline numerator (the divide
+        #     by the gathered link bandwidth happens in _chain_times)
         #   _intra/_inter_coef — ring coefficients phases*(n-1)/n*msg by
         #     integer group size, computed with the reference op order
-        g = self.bw.shape[0]
-        eye_g = np.eye(g, dtype=bool)
-        node = np.arange(g) // spec.gpus_per_node
-        same = node[:, None] == node[None, :]
-        self._bw_noself = np.where(eye_g, np.inf, self.bw)
-        bw_intra = np.where(same & ~eye_g, self.bw, np.inf)
-        # min over a node-cluster's ordered pairs == min over unordered pairs
-        # of min(bw[i,j], bw[j,i]); symmetrising once halves the reductions
-        self._sym_intra = np.minimum(bw_intra, bw_intra.T)
         if conf.pp > 1:
-            with np.errstate(divide="ignore"):
-                self._hop_cost = 2.0 * prof.msg_pp / self.bw
+            self._hopf = 2.0 * prof.msg_pp
         self._jlt_dp = (np.arange(conf.dp)[None, :] <
                         np.arange(conf.dp)[:, None])
         self._intra_coef = np.array(
@@ -293,11 +342,15 @@ class DedicationEngine:
                          out=np.ones_like(gbw), where=ok)
 
     def _chain_times(self, perm: np.ndarray, csel) -> np.ndarray:
+        # gather the hop links, then divide — elementwise identical to the
+        # historical full (G, G) ``2*msg_pp/bw`` precompute, without the
+        # O(G^2) pass (and 800 MB at 10k GPUs) per engine
         src = perm[self.idx.pos_pp_src[:, csel]]
         dst = perm[self.idx.pos_pp_dst[:, csel]]
-        t = self._hop_cost[src[0], dst[0]]
-        for x in range(1, self.conf.pp - 1):
-            t = t + self._hop_cost[src[x], dst[x]]
+        with np.errstate(divide="ignore"):
+            t = self._hopf / self.bw[src[0], dst[0]]
+            for x in range(1, self.conf.pp - 1):
+                t = t + self._hopf / self.bw[src[x], dst[x]]
         return t
 
     def _stage_scales(self, perm: np.ndarray, xsel) -> np.ndarray:
@@ -555,10 +608,19 @@ def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
                       compute_aware: bool = True) -> SAResult:
     """Best-of-``n_chains`` independent annealing restarts.
 
-    The wall-clock and iteration budgets are split evenly across chains, so
-    the total cost matches a single :func:`anneal` call with the same
-    budgets.  Chain ``k`` runs with seed ``seed * 100003 + k``, making the
-    whole driver deterministic in ``seed``.
+    The budgets are split across chains so the total cost matches a single
+    :func:`anneal` call with the same budgets — *exactly*: with
+    ``base, rem = divmod(max_iters, n_chains)``, chain ``k`` runs
+    ``base + 1`` iterations when ``k < rem`` else ``base`` (the historical
+    ``max(1, max_iters // n_chains)`` silently ran up to ``n_chains - 1``
+    extra iterations, and a full ``n_chains`` extra when
+    ``n_chains > max_iters``).  Edge cases are defined, not accidental:
+    a chain whose share is zero iterations runs no moves and contributes
+    its initial permutation's score; ``time_limit_s = 0`` gives every
+    chain a zero wall-clock budget, so all chains are score-only and the
+    result is the initial permutation.  Chain ``k`` runs with seed
+    ``seed * 100003 + k``, making the whole driver deterministic in
+    ``seed``.
 
     Returns:
         :class:`SAResult` of the winning chain, with ``iters``/``seconds``
@@ -571,12 +633,13 @@ def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
         engine = DedicationEngine(conf, bw, prof, spec,
                                   compute_aware=compute_aware)
     per_t = time_limit_s / n_chains
-    per_it = max(1, max_iters // n_chains)
+    base_it, rem_it = divmod(max_iters, n_chains)
     best: Optional[SAResult] = None
     iters, seconds, lats = 0, 0.0, []
     for k in range(n_chains):
         res = anneal(conf, bw, prof, spec, time_limit_s=per_t,
-                     max_iters=per_it, alpha=alpha,
+                     max_iters=base_it + (1 if k < rem_it else 0),
+                     alpha=alpha,
                      seed=seed * 100003 + k, init_perm=init_perm,
                      engine=engine)
         iters += res.iters

@@ -1,0 +1,457 @@
+"""JAX-native dedication scorer and vmapped multi-chain annealer.
+
+This is the ``backend="jax"`` execution engine of the unified SA core
+(``repro.core.annealing``): the Eq. 3-6 mapping score is re-expressed as a
+pure function of a flat permutation device array, the move-propose /
+score / accept loop becomes a ``lax.scan``, and the scan is ``vmap``-ed
+across annealing chains *and* across the same-shape candidate
+configurations — one XLA dispatch advances every chain of every candidate.
+
+Bit-parity with the NumPy engine is a hard contract, not a tolerance: the
+score mirrors :class:`repro.core.dedication.DedicationEngine` reduction by
+reduction (min/max reductions are order-insensitive; the pipeline-chain
+hop accumulation replays the reference's left-to-right fold; the tiered
+per-stage sum replays NumPy's pairwise summation order via
+:func:`np_pairwise_sum`), and it runs in float64 under a scoped
+``jax.experimental.enable_x64`` so elementwise IEEE arithmetic matches
+NumPy exactly.  ``tests/test_backend_determinism.py`` pins byte-identical
+``Plan`` JSON across backends on top of this.
+
+The group-reduce inner step (per-group min-bandwidth scales, per-stage
+max compute slowdown) dispatches between the Pallas kernels in
+``repro.kernels.group_reduce`` and their pure-jnp references via the
+``kernels=`` knob: ``"pallas"`` (native, TPU), ``"interpret"`` (Pallas
+interpreter — bit-accurate on CPU, slow), ``"ref"`` (pure jnp), or
+``"auto"`` (the ``REPRO_KERNELS`` env var, else pallas on TPU / ref
+elsewhere — matching ``repro.kernels.ops``).
+
+One compilation subtlety guards the bit contract: XLA's CPU backend
+contracts ``a * b + c`` into a fused multiply-add when the host supports
+AVX2/FMA, which differs from NumPy's separate fmul/fadd by 1 ulp on rare
+operand combinations — enough to flip an SA accept decision and diverge a
+whole chain.  ``xla_allow_excess_precision=false`` does *not* disable the
+contraction, so every computation here is AOT-compiled with
+``xla_cpu_max_isa=AVX`` (pre-FMA vector ISA) via :func:`_aot_compile`;
+eager JAX, which never fuses, already matches NumPy.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cluster import ClusterSpec, compute_slowdowns
+from .dedication import PairCache
+from .simulator import Conf, Profile
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from ..kernels.group_reduce import (group_max, group_max_ref,
+                                    group_min_scale, group_min_scale_ref)
+
+
+def np_pairwise_sum(x, n: int):
+    """Sum ``x[:n]`` in exactly NumPy's pairwise-summation order.
+
+    ``np.sum`` on a contiguous float64 vector is *not* a left fold: it runs
+    an 8-accumulator blocked pairwise scheme, so ``jnp.sum`` (a flat XLA
+    reduce) differs from it in the last bits for almost any ``n >= 3``.
+    The tiered-cluster combine (``latency._hetero_combine``) sums the
+    per-stage compute vector with ``np.sum``, so the JAX scorer replays the
+    same association order element by element.  Works on NumPy arrays and
+    traced JAX values alike (the loop structure is host-side Python over a
+    static length); pinned bit-exact against ``np.sum`` in
+    ``tests/test_jax_engine.py``.
+    """
+    def pw(lo, m):
+        if m < 8:
+            res = 0.0
+            for i in range(m):
+                res = res + x[lo + i]
+            return res
+        if m <= 128:
+            r = [x[lo + k] for k in range(8)]
+            i = 8
+            while i + 8 <= m:
+                for k in range(8):
+                    r[k] = r[k] + x[lo + i + k]
+                i += 8
+            res = ((r[0] + r[1]) + (r[2] + r[3])) + \
+                ((r[4] + r[5]) + (r[6] + r[7]))
+            while i < m:
+                res = res + x[lo + i]
+                i += 1
+            return res
+        m2 = (m // 2) - ((m // 2) % 8)
+        return pw(lo, m2) + pw(lo + m2, m - m2)
+
+    return pw(0, n)
+
+
+def _aot_compile(fn, *args):
+    """Lower ``fn`` at the avals of ``args`` and compile with fused
+    multiply-add contraction disabled on CPU (``xla_cpu_max_isa=AVX`` —
+    the last x86 vector ISA without FMA), so the jitted score stays
+    bit-identical to the NumPy engine.  Non-CPU backends compile with
+    default options (no FMA contraction contract is claimed there)."""
+    lowered = jax.jit(fn).lower(*args)
+    if jax.default_backend() != "cpu":
+        return lowered.compile()
+    return lowered.compile(compiler_options={"xla_cpu_max_isa": "AVX"})
+
+
+def kernels_mode(kernels: str = "auto") -> str:
+    """Resolve the group-reduce implementation: 'pallas' | 'interpret' |
+    'ref'.  ``"auto"`` defers to the ``REPRO_KERNELS`` env var (the same
+    knob ``repro.kernels.ops`` honours), else picks pallas on TPU and the
+    pure-jnp reference elsewhere."""
+    if kernels in ("pallas", "interpret", "ref"):
+        return kernels
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env in ("pallas", "interpret", "ref"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _apply_move(perm, pos, kind, pa, pb):
+    """One SA move as an index remap (all three variants are computed and
+    the ``kind`` selects — cheap O(n) selects, no dynamic shapes).
+
+    Semantics (shared with ``annealing._move_numpy``): with
+    ``i = min(pa, pb)``, ``j = max(pa, pb)`` — migration (kind 0) removes
+    the element at ``i`` and reinserts it at ``j``; swap (kind 1)
+    exchanges positions ``i`` and ``j``; reverse (kind 2) reverses the
+    span ``[i, j]``.
+    """
+    i = jnp.minimum(pa, pb)
+    j = jnp.maximum(pa, pb)
+    mig = jnp.where((pos >= i) & (pos < j), pos + 1,
+                    jnp.where(pos == j, i, pos))
+    swp = jnp.where(pos == i, j, jnp.where(pos == j, i, pos))
+    rev = jnp.where((pos >= i) & (pos <= j), i + j - pos, pos)
+    src = jnp.where(kind == 0, mig, jnp.where(kind == 1, swp, rev))
+    return perm[src]
+
+
+class JaxDedicationEngine:
+    """Batched JAX scorer + vmapped multi-chain SA for one (pp, tp, cp, dp)
+    shape.
+
+    One engine serves every same-shape candidate (microbatch variants):
+    the shape-only tensors (pair-bandwidth matrices, ring coefficients,
+    device slowdowns) are shared device arrays, while the per-candidate
+    profile scalars form the vmapped axis.  ``score()`` is the full
+    evaluator (bit-identical to ``DedicationEngine.score``, pinned by the
+    equivalence suite); :meth:`anneal` runs the vmapped
+    chains-x-candidates ``lax.scan``.
+
+    Args:
+        confs: same-shape candidate configurations.
+        profs: ``profs[i]`` is the profile of ``confs[i]``; the shape-only
+            fields (``tp_ref_bw``/``cp_ref_bw``/``msg_dp``/``stage_work``)
+            must agree across candidates (asserted — true of
+            ``build_profile`` output for one workload).
+        bw: ``(G, G)`` profiled bandwidth matrix.
+        spec: cluster description.
+        kernels: group-reduce implementation knob (see
+            :func:`kernels_mode`).
+        compute_aware: ``False`` prices every GPU at reference speed even
+            on tiered specs (the compute-blind ablation), mirroring
+            ``DedicationEngine``.
+        pairs: optional prebuilt :class:`~repro.core.dedication.PairCache`
+            for this ``(bw, spec)`` — skips the host-side O(G^2)
+            construction when the driver already built one.
+        device_pairs: optional ``.device_pairs`` of a sibling engine built
+            for the *same* ``(bw, spec, compute_aware)`` — shares the big
+            (G, G) device buffers across shape groups instead of paying
+            the host->device copy (~2.5 GB at 10k GPUs) per group.
+    """
+
+    def __init__(self, confs: Sequence[Conf], profs: Sequence[Profile],
+                 bw: np.ndarray, spec: ClusterSpec, *,
+                 kernels: str = "auto", compute_aware: bool = True,
+                 pairs: Optional[PairCache] = None,
+                 device_pairs: Optional[dict] = None):
+        conf = confs[0]
+        shape = (conf.pp, conf.tp, conf.cp, conf.dp)
+        for c in confs[1:]:
+            if (c.pp, c.tp, c.cp, c.dp) != shape:
+                raise ValueError("JaxDedicationEngine needs same-shape confs")
+        p0 = profs[0]
+        for p in profs[1:]:
+            assert (p.tp_ref_bw, p.cp_ref_bw, p.msg_dp,
+                    p.stage_work) == (p0.tp_ref_bw, p0.cp_ref_bw,
+                                      p0.msg_dp, p0.stage_work), \
+                "profiles vary within shape; shared tensors invalid"
+        self.confs = list(confs)
+        self.pp, self.tp, self.cp, self.dp = shape
+        self.n = conf.n_gpus
+        self.nc = self.tp * self.cp * self.dp
+        self.tpc = self.tp * self.cp
+        self._kmode = kernels_mode(kernels)
+        self._tp_ref = float(p0.tp_ref_bw)
+        self._cp_ref = float(p0.cp_ref_bw)
+
+        # host-side constants: the (G, G) pair matrices come from the same
+        # PairCache construction the NumPy engine shares (bit-identical by
+        # design), the small per-shape tensors are built here
+        if pairs is None:
+            pairs = PairCache.build(bw, spec.gpus_per_node)
+        jlt = (np.arange(self.dp)[None, :] < np.arange(self.dp)[:, None])
+        intra_coef = np.array(
+            [4 * (c - 1) / c * p0.msg_dp if c else 0.0
+             for c in range(self.dp + 1)])
+        inter_coef = np.array(
+            [2 * (c - 1) / c * p0.msg_dp if c else 0.0
+             for c in range(self.dp + 1)])
+        slow = compute_slowdowns(spec) if compute_aware else None
+        self.tiered = slow is not None
+
+        # per-candidate profile scalars (the vmapped axis); all arithmetic
+        # on host NumPy f64 so the values equal the NumPy engine's
+        w = (np.asarray(p0.stage_work) if p0.stage_work is not None
+             else np.ones(self.pp))
+        c_arr = np.array([p.c_fwd + p.c_bwd for p in profs])
+        sc = {
+            "c": c_arr,
+            "tsum_tp": np.array([p.t_tp_fwd + p.t_tp_bwd for p in profs]),
+            "tsum_cp": np.array([p.t_cp_fwd + p.t_cp_bwd for p in profs]),
+            "hopf": np.array([2.0 * p.msg_pp for p in profs]),
+            "r": np.array([c.n_mb / c.pp for c in confs]),
+            "cw": (c_arr[:, None] * w[None, :] if self.tiered else None),
+        }
+
+        # device residency in f64 — arrays must be created inside the
+        # scoped x64 context or jnp silently downcasts them to f32.  The
+        # (G, G) tensors travel as *arguments* of the jitted functions,
+        # never as closure constants: XLA embeds (and constant-folds)
+        # captured constants into the executable, which at 10k GPUs means
+        # gigabytes of f64 baked into every compile.
+        with enable_x64():
+            if device_pairs is None:
+                device_pairs = {
+                    "bw": jnp.asarray(pairs.bw),
+                    "bw_noself": jnp.asarray(pairs.bw_noself),
+                    "sym_intra": jnp.asarray(pairs.sym_intra),
+                    "slow": None if slow is None else jnp.asarray(slow),
+                }
+            self.device_pairs = device_pairs
+            self._env = {
+                **device_pairs,
+                "jlt": jnp.asarray(jlt),
+                "intra_coef": jnp.asarray(intra_coef),
+                "inter_coef": jnp.asarray(inter_coef),
+            }
+            self._sc = {k: (None if v is None else jnp.asarray(v))
+                        for k, v in sc.items()}
+        self._jit_score = None
+        self._batch_cache = {}
+        self._anneal_cache = {}
+
+    # -- the pure scoring function (one perm, one candidate's scalars) ----
+
+    def _group_scales(self, sub, ref_bw):
+        if self._kmode == "ref":
+            return group_min_scale_ref(sub, ref_bw)
+        return group_min_scale(sub, ref_bw,
+                               interpret=(self._kmode == "interpret"))
+
+    def _group_max(self, vals):
+        if self._kmode == "ref":
+            return group_max_ref(vals)
+        return group_max(vals, interpret=(self._kmode == "interpret"))
+
+    def _score_one(self, perm, sc, env):
+        """Full Eq. 3-6 evaluation of one permutation; every reduction
+        mirrors ``DedicationEngine`` (see module docstring for why the
+        result is bit-identical, not merely close)."""
+        pp, tp, cp, dp = self.pp, self.tp, self.cp, self.dp
+        nc, tpc = self.nc, self.tpc
+
+        if tp > 1:
+            g = perm.reshape(-1, tp)
+            sub = env["bw_noself"][g[:, :, None], g[:, None, :]]
+            tp_scale = jnp.maximum(1.0, self._group_scales(
+                sub, self._tp_ref).max())
+        else:
+            tp_scale = 1.0
+
+        if cp > 1:
+            g = perm.reshape(pp * dp, cp, tp).transpose(0, 2, 1) \
+                .reshape(-1, cp)
+            sub = env["bw_noself"][g[:, :, None], g[:, None, :]]
+            cp_scale = jnp.maximum(1.0, self._group_scales(
+                sub, self._cp_ref).max())
+        else:
+            cp_scale = 1.0
+
+        if pp > 1:
+            src = perm[:(pp - 1) * nc].reshape(pp - 1, nc)
+            dst = perm[nc:].reshape(pp - 1, nc)
+            hop = sc["hopf"] / env["bw"][src, dst]
+            t = hop[0]
+            for x in range(1, pp - 1):       # reference left-to-right fold
+                t = t + hop[x]
+            t_pp = jnp.maximum(0.0, t.max())
+        else:
+            t_pp = 0.0
+
+        # stage-0 DP hierarchical all-reduce (Eq. 6); the only DP groups on
+        # the critical path — mirrors DedicationEngine._dp0_times
+        ids = perm[:nc].reshape(dp, tpc).T                    # (tpc, dp)
+        ii, jj = ids[:, :, None], ids[:, None, :]
+        sym = env["sym_intra"][ii, jj]
+        member_min = sym.min(axis=2)
+        same = jnp.isfinite(sym)
+        counts = same.sum(axis=2) + 1
+        intra = (env["intra_coef"][counts] / member_min).max(axis=1)
+        is_rep = ~(same & env["jlt"]).any(axis=2)
+        n_reps = is_rep.sum(axis=1)
+        pair = is_rep[:, :, None] & is_rep[:, None, :]
+        rep_min = jnp.where(pair, env["bw_noself"][ii, jj],
+                            jnp.inf).min(axis=(1, 2))
+        inter = env["inter_coef"][n_reps] / rep_min
+        t_dp = jnp.maximum(0.0, (intra + inter).max())
+
+        t_tp = sc["tsum_tp"] * tp_scale
+        t_cm = t_tp + sc["tsum_cp"] * cp_scale
+        if self.tiered:
+            sv = self._group_max(env["slow"][perm.reshape(pp, nc)])
+            c_x = sc["cw"] * sv
+            c_max = c_x.max()
+            c_sum = np_pairwise_sum(c_x, pp)
+            t_bubble = float(pp) * (c_max + t_cm) + t_pp
+            return ((t_bubble * sc["r"] + (c_sum - c_max))
+                    + float(pp - 1) * t_cm) + t_dp
+        t_bubble = float(pp) * (sc["c"] + t_cm) + t_pp
+        t_straggler = float(pp - 1) * (sc["c"] + t_cm)
+        return (t_bubble * sc["r"] + t_straggler) + t_dp
+
+    # -- public scoring (tests / coarse assignment) -----------------------
+
+    def score(self, perm: np.ndarray, cand: int = 0) -> float:
+        """Full JAX evaluation of ``perm`` for candidate ``cand`` — the
+        same value as ``DedicationEngine(confs[cand], ...).score(perm)``,
+        bitwise."""
+        with enable_x64():
+            sc = {k: (None if v is None else v[cand])
+                  for k, v in self._sc.items()}
+            p = jnp.asarray(np.asarray(perm), dtype=jnp.int32)
+            if self._jit_score is None:
+                self._jit_score = _aot_compile(self._score_one, p, sc,
+                                               self._env)
+            return float(self._jit_score(p, sc, self._env))
+
+    def score_batch(self, perms: np.ndarray, cand: int = 0) -> np.ndarray:
+        """Score a ``(R, n)`` batch of permutations in one vmapped dispatch.
+
+        Element ``r`` equals ``score(perms[r], cand)`` bitwise — the batch
+        axis only amortises dispatch and lets XLA pipeline the gathers.
+        This is the unit of work the ``--huge`` benchmark's throughput gate
+        measures against a loop of NumPy-engine full re-scores.
+        """
+        with enable_x64():
+            sc = {k: (None if v is None else v[cand])
+                  for k, v in self._sc.items()}
+            p = jnp.asarray(np.asarray(perms), dtype=jnp.int32)
+            exe = self._batch_cache.get(p.shape)
+            if exe is None:
+                exe = _aot_compile(
+                    jax.vmap(self._score_one, in_axes=(0, None, None)),
+                    p, sc, self._env)
+                self._batch_cache[p.shape] = exe
+            return np.asarray(exe(p, sc, self._env))
+
+    # -- the vmapped multi-chain annealer ---------------------------------
+
+    def _build_anneal(self, alpha: float):
+        pos = jnp.arange(self.n, dtype=jnp.int32)
+
+        def run_chain(init_perm, pas, pbs, kinds, thresh, valid,
+                      ppas, ppbs, pkinds, sc, env):
+            cur0 = self._score_one(init_perm, sc, env)
+
+            def probe(carry, xs):
+                pk, pa, pb = xs
+                val = self._score_one(
+                    _apply_move(init_perm, pos, pk, pa, pb), sc, env)
+                return jnp.maximum(carry, jnp.abs(val - cur0)), None
+
+            mx, _ = jax.lax.scan(probe, 0.0, (pkinds, ppas, ppbs))
+            temp0 = jnp.maximum(jnp.maximum(mx, cur0 * 1e-3), 1e-12)
+
+            def step(carry, xs):
+                perm, cur, temp, best, bperm = carry
+                kind, pa, pb, thr, ok = xs
+                cand = _apply_move(perm, pos, kind, pa, pb)
+                val = self._score_one(cand, sc, env)
+                delta = val - cur
+                accept = ok & ((delta <= 0) | (delta < temp * thr))
+                perm = jnp.where(accept, cand, perm)
+                cur = jnp.where(accept, val, cur)
+                imp = accept & (val < best)
+                best = jnp.where(imp, val, best)
+                bperm = jnp.where(imp, cand, bperm)
+                temp = jnp.where(ok, temp * alpha, temp)
+                return (perm, cur, temp, best, bperm), None
+
+            carry0 = (init_perm, cur0, temp0, cur0, init_perm)
+            (_, cur, _, best, bperm), _ = jax.lax.scan(
+                step, carry0, (kinds, pas, pbs, thresh, valid))
+            return best, bperm, cur
+
+        over_chains = jax.vmap(
+            run_chain,
+            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, None, None))
+        over_cands = jax.vmap(
+            over_chains,
+            in_axes=(0, 0, 0, None, None, None, 0, 0, None, 0, None))
+        return over_cands
+
+    def anneal(self, init_perms: np.ndarray, pas: np.ndarray,
+               pbs: np.ndarray, kinds: np.ndarray, thresh: np.ndarray,
+               valid: np.ndarray, probe_pas: np.ndarray,
+               probe_pbs: np.ndarray, probe_kinds: np.ndarray, *,
+               alpha: float = 0.999):
+        """Advance every chain of every candidate in one jitted dispatch.
+
+        Args:
+            init_perms: ``(C, n)`` start permutation per candidate.
+            pas / pbs: ``(C, K, T)`` absolute move positions (island
+                offsets already applied per candidate).
+            kinds: ``(K, T)`` move kinds, shared across candidates.
+            thresh: ``(K, T)`` precomputed ``-log(u)`` accept thresholds.
+            valid: ``(K, T)`` per-chain iteration mask (False iterations
+                are no-ops — chains may have unequal budgets).
+            probe_pas / probe_pbs: ``(C, K, P)`` temperature-probe moves.
+            probe_kinds: ``(K, P)``.
+            alpha: geometric temperature decay.
+
+        Returns:
+            ``(bests, best_perms, finals)`` NumPy arrays of shapes
+            ``(C, K)``, ``(C, K, n)``, ``(C, K)``.
+        """
+        with enable_x64():
+            i32 = jnp.int32
+            args = (jnp.asarray(init_perms, dtype=i32),
+                    jnp.asarray(pas, dtype=i32), jnp.asarray(pbs, dtype=i32),
+                    jnp.asarray(kinds, dtype=i32),
+                    jnp.asarray(thresh), jnp.asarray(valid),
+                    jnp.asarray(probe_pas, dtype=i32),
+                    jnp.asarray(probe_pbs, dtype=i32),
+                    jnp.asarray(probe_kinds, dtype=i32), self._sc,
+                    self._env)
+            # AOT executables are shape-specialized; alpha is baked into
+            # the scan body, so it joins the cache key too
+            key = (np.shape(init_perms), np.shape(pas), np.shape(kinds),
+                   np.shape(probe_kinds), alpha)
+            exe = self._anneal_cache.get(key)
+            if exe is None:
+                exe = _aot_compile(self._build_anneal(alpha), *args)
+                self._anneal_cache[key] = exe
+            best, bperm, fin = exe(*args)
+            return (np.asarray(best), np.asarray(bperm, dtype=np.int64),
+                    np.asarray(fin))

@@ -44,9 +44,13 @@ from .simulator import Conf, Workload
 
 # 2: heterogeneous-compute provenance — ``provenance.tiers`` records the
 #    device-tier table digest, the table itself, and the node assignment
-#    (null for homogeneous clusters).  Any further change to the serialized
-#    shape MUST bump this (tests/test_plan_golden.py enforces it).
-PLAN_SCHEMA_VERSION = 2
+#    (null for homogeneous clusters).
+# 3: backend-selectable SA core — ``provenance.budget`` grows ``backend``
+#    (null = historical per-candidate driver, "numpy"/"jax" = the unified
+#    MovePlan core) and ``hierarchical`` (island search; null = auto by
+#    fleet size).  Any further change to the serialized shape MUST bump
+#    this (tests/test_plan_golden.py enforces it).
+PLAN_SCHEMA_VERSION = 3
 
 
 # ---------------------------------------------------------------------------
@@ -89,15 +93,35 @@ class Budget:
         sa_topk: anneal only the ``k`` best pre-scored candidates; the
             rest keep their default mapping (``None`` = anneal every
             survivor).
+        backend: SA execution engine.  ``None`` (default) keeps the
+            historical per-candidate ``anneal``/``anneal_multistart``
+            driver, bit-exact with its regression fixtures; ``"numpy"`` /
+            ``"jax"`` select the unified :mod:`~repro.core.annealing`
+            core (precomputed :class:`~repro.core.annealing.MovePlan`,
+            exact chain budget split, optional hierarchical island
+            search) executed incrementally on the host or as one vmapped
+            ``lax.scan`` dispatch — the two produce byte-identical plans.
+        hierarchical: island-decomposed search (coarse inter-island
+            arrangement + within-island refinement; unified backends
+            only).  ``None`` = auto: hierarchical at >= 2048 GPUs.
     """
     sa_seconds: float = 1.0
     sa_iters: int = 8_000
     n_chains: int = 1
     sa_topk: Optional[int] = None
+    backend: Optional[str] = None
+    hierarchical: Optional[bool] = None
 
     def __post_init__(self):
         if self.sa_seconds <= 0 or self.sa_iters < 1 or self.n_chains < 1:
             raise ValueError("sa_seconds/sa_iters/n_chains must be positive")
+        if self.backend not in (None, "numpy", "jax"):
+            raise ValueError(
+                f"backend must be None, 'numpy' or 'jax', "
+                f"got {self.backend!r}")
+        if self.hierarchical is not None \
+                and not isinstance(self.hierarchical, bool):
+            raise ValueError("hierarchical must be None or a bool")
 
 
 @dataclass(frozen=True)

@@ -37,7 +37,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 import numpy as np
 
 from .cluster import ClusterSpec
-from .dedication import (DedicationEngine, GroupIndex, anneal,
+from .dedication import (DedicationEngine, GroupIndex, PairCache, anneal,
                          anneal_multistart)
 from .latency import default_mapping_latencies
 from .memory import MemoryEstimator, enumerate_confs
@@ -211,7 +211,28 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
         else:
             order = np.argsort(base_lat, kind="stable")
             sa_set = set(int(i) for i in order[:max(sa_topk, 0)])
+        if budget.backend is not None:
+            # unified backend-selectable core: one MovePlan executed by
+            # the incremental NumPy engine or the vmapped JAX annealer
+            # (byte-identical results); candidates batched per shape
+            from .annealing import dedicate_candidates
+            ts = time.perf_counter()
+            sa_res = dedicate_candidates(survivors, profiles,
+                                         sorted(sa_set), bw, spec, budget,
+                                         seed)
+            sa_time = time.perf_counter() - ts
+            for i, conf in enumerate(survivors):
+                if i in sa_res:
+                    cands.append(Candidate(conf, sa_res[i].mapping,
+                                           sa_res[i].latency,
+                                           float(mem_preds[i])))
+                else:
+                    cands.append(Candidate(conf, default_mapping(conf),
+                                           float(base_lat[i]),
+                                           float(mem_preds[i])))
+            survivors = []            # handled; skip the legacy loop
         index_cache: Dict[Tuple[int, int, int, int], GroupIndex] = {}
+        pair_cache: Optional[PairCache] = None
         for i, (conf, prof) in enumerate(zip(survivors, profiles)):
             if i not in sa_set:
                 cands.append(Candidate(conf, default_mapping(conf),
@@ -222,7 +243,12 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
             idx = index_cache.get(shape)
             if idx is None:
                 idx = index_cache[shape] = GroupIndex.build(conf)
-            engine = DedicationEngine(conf, bw, prof, spec, index=idx)
+            if pair_cache is None:
+                # the O(G^2) pair matrices depend only on (bw, spec) —
+                # one build serves every annealed candidate
+                pair_cache = PairCache.build(bw, spec.gpus_per_node)
+            engine = DedicationEngine(conf, bw, prof, spec, index=idx,
+                                      pairs=pair_cache)
             ts = time.perf_counter()
             if n_chains > 1:
                 res = anneal_multistart(conf, bw, prof, spec,

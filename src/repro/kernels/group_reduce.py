@@ -1,0 +1,116 @@
+"""Group-reduce kernels for the JAX dedication scorer.
+
+The vmapped SA core spends its inner step reducing many small gathered
+bandwidth sub-matrices — per communicator group, the min link bandwidth
+turned into a slowdown scale (TP / CP groups), and per pipeline stage the
+max member compute slowdown.  Both reductions are fused here as Pallas
+kernels: one VMEM-resident ``(block, m, m)`` (or ``(block, m)``) tile per
+grid step, reduced and rescaled without materialising the masked
+intermediates the pure-jnp path creates.
+
+Each kernel has a pure-jnp reference (``*_ref``) computing the identical
+values with the identical elementwise ops — min and max are
+order-insensitive and the divide is elementwise, so the Pallas output is
+bit-equal to the reference on every backend (pinned by
+``tests/test_jax_engine.py``).  On CPU the kernels run under
+``interpret=True``; native TPU lowering would want f32 inputs and
+(8, 128)-aligned tiles, which the tiny group sizes here do not provide —
+the scorer therefore defaults to the reference path off-TPU (see
+``repro.core.jax_engine``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# per-group min-bandwidth -> slowdown scale
+# ---------------------------------------------------------------------------
+
+def group_min_scale_ref(sub: jax.Array, ref_bw) -> jax.Array:
+    """Per-group slowdown scales from gathered bandwidth sub-matrices.
+
+    Args:
+        sub: ``(n_groups, m, m)`` pairwise link bandwidths of each
+            communicator group (self links pre-masked to ``inf``).
+        ref_bw: scalar bandwidth the profiled time was measured at.
+
+    Returns:
+        ``(n_groups,)`` scales: ``ref_bw / min(sub)`` where the group min
+        is finite and positive, else 1.0 (the degenerate-link guard of
+        ``latency._tp_scale``).
+    """
+    gbw = sub.min(axis=(1, 2))
+    ok = jnp.isfinite(gbw) & (gbw > 0)
+    return jnp.where(ok, ref_bw / gbw, 1.0)
+
+
+def _min_scale_kernel(sub_ref, refbw_ref, o_ref):
+    sub = sub_ref[...]
+    gbw = sub.min(axis=(1, 2))
+    ok = jnp.isfinite(gbw) & (gbw > 0)
+    o_ref[...] = jnp.where(ok, refbw_ref[0] / gbw, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def group_min_scale(sub: jax.Array, ref_bw, *, block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Pallas version of :func:`group_min_scale_ref` (bit-equal output)."""
+    n, m, _ = sub.shape
+    b = min(block, n)
+    pad = (-n) % b
+    if pad:
+        # padded groups reduce to an all-inf min -> masked to scale 1.0,
+        # then sliced away
+        sub = jnp.pad(sub, ((0, pad), (0, 0), (0, 0)),
+                      constant_values=jnp.inf)
+    refbw = jnp.full((1,), ref_bw, dtype=sub.dtype)
+    out = pl.pallas_call(
+        _min_scale_kernel,
+        grid=((n + pad) // b,),
+        in_specs=[pl.BlockSpec((b, m, m), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), sub.dtype),
+        interpret=interpret,
+    )(sub, refbw)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# per-stage max member slowdown
+# ---------------------------------------------------------------------------
+
+def group_max_ref(vals: jax.Array) -> jax.Array:
+    """Row-wise max: ``(n_rows, m) -> (n_rows,)`` (per-stage compute
+    slowdown reduce of the tiered-cluster path)."""
+    return vals.max(axis=1)
+
+
+def _max_kernel(v_ref, o_ref):
+    o_ref[...] = v_ref[...].max(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def group_max(vals: jax.Array, *, block: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """Pallas version of :func:`group_max_ref` (bit-equal output)."""
+    n, m = vals.shape
+    b = min(block, n)
+    pad = (-n) % b
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0)),
+                       constant_values=-jnp.inf)
+    out = pl.pallas_call(
+        _max_kernel,
+        grid=((n + pad) // b,),
+        in_specs=[pl.BlockSpec((b, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), vals.dtype),
+        interpret=interpret,
+    )(vals)
+    return out[:n]

@@ -1,0 +1,150 @@
+"""Hierarchical (island-decomposed) worker dedication.
+
+Pins the three structural guarantees of the hierarchical search layer:
+island decomposition is a *partition* of the flat position space (the
+concatenated islands round-trip to ``arange(n)``), refinement never
+worsens the coarse inter-island assignment's simulated latency (SA best
+starts at the coarse permutation), and single-island specs degenerate
+bit-exactly to the flat path (the MovePlan skips the island draw, so the
+RNG streams coincide)."""
+import numpy as np
+import pytest
+
+from repro.core import (Budget, ClusterSpec, Conf, DedicationEngine,
+                        Workload, build_islands, build_profile,
+                        coarse_assign, coarse_orderings,
+                        dedicate_candidates, perm_to_mapping,
+                        pipette_latency, profile_bandwidth)
+from repro.core.annealing import HIER_AUTO_GPUS
+from repro.core.cluster import A100_TIER, V100_TIER, mixed_fleet_spec
+from repro.configs.gpt_paper import GPT_3_1B
+
+W = Workload(GPT_3_1B, 2048, 32)
+MIXED = mixed_fleet_spec("hier-mixed-32x4", 32, (A100_TIER, V100_TIER),
+                         (0.5, 0.5), gpus_per_node=4, seed=13)
+UNIFORM = ClusterSpec("hier-uni-2x4", 2, gpus_per_node=4, seed=1)
+
+
+def _setup(spec, conf):
+    bw, _ = profile_bandwidth(spec)
+    prof = build_profile(W, spec, conf)
+    return bw, prof
+
+
+# ---------------------------------------------------------------------------
+# island decomposition
+# ---------------------------------------------------------------------------
+
+def test_flat_mode_is_one_island():
+    islands = build_islands(MIXED, hierarchical=False)
+    assert len(islands) == 1
+    assert np.array_equal(islands[0], np.arange(MIXED.n_gpus))
+
+
+@pytest.mark.parametrize("cap", [8, 16, 64, 256])
+def test_islands_partition_position_space(cap):
+    """Round-trip: the islands are disjoint and cover every position —
+    sorting the concatenation reproduces the flat arange exactly."""
+    islands = build_islands(MIXED, hierarchical=True, max_island_gpus=cap)
+    cat = np.concatenate(islands)
+    assert np.array_equal(np.sort(cat), np.arange(MIXED.n_gpus))
+    for isl in islands:
+        assert len(isl) >= 2                 # SA needs two positions
+        # islands never split a node
+        nodes = np.asarray(isl) // MIXED.gpus_per_node
+        for n in np.unique(nodes):
+            assert (nodes == n).sum() == MIXED.gpus_per_node
+
+
+def test_islands_respect_tier_boundaries():
+    """Each island is tier-pure: coarse assignment reasons about whole
+    islands, so mixing tiers inside one would hide heterogeneity."""
+    islands = build_islands(MIXED, hierarchical=True, max_island_gpus=16)
+    assert len(islands) > 1
+    tiers = np.asarray(MIXED.node_tiers)
+    for isl in islands:
+        node_tiers = tiers[np.asarray(isl) // MIXED.gpus_per_node]
+        assert len(set(node_tiers.tolist())) == 1
+
+
+def test_uniform_small_spec_is_single_island():
+    islands = build_islands(UNIFORM, hierarchical=True)
+    assert len(islands) == 1
+
+
+# ---------------------------------------------------------------------------
+# coarse inter-island assignment
+# ---------------------------------------------------------------------------
+
+def test_coarse_assign_offsets_and_value():
+    conf = Conf(4, 2, 16, 1, 32)
+    bw, prof = _setup(MIXED, conf)
+    eng = DedicationEngine(conf, bw, prof, MIXED)
+    islands = build_islands(MIXED, hierarchical=True, max_island_gpus=32)
+    orderings = coarse_orderings(islands, MIXED)
+    assert orderings and all(
+        sorted(o) == list(range(len(islands))) for o in orderings)
+    init, offsets, value = coarse_assign(eng, islands, orderings)
+    # the init permutation is a permutation, offsets delimit the islands
+    assert np.array_equal(np.sort(init), np.arange(MIXED.n_gpus))
+    assert offsets.shape == (len(islands),)
+    assert value == eng.score(init)
+    # the coarse winner is the best of the scored orderings
+    for o in orderings:
+        cand = np.concatenate([islands[i] for i in o])
+        assert value <= eng.score(cand)
+
+
+# ---------------------------------------------------------------------------
+# refinement and degeneration
+# ---------------------------------------------------------------------------
+
+def _dedicate(spec, conf, budget):
+    bw, prof = _setup(spec, conf)
+    res = dedicate_candidates([conf], [prof], [0], bw, spec, budget,
+                              seed=7)
+    return res[0], bw, prof
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_refinement_never_worsens_coarse(backend):
+    if backend == "jax":
+        pytest.importorskip("jax")
+    conf = Conf(4, 2, 16, 1, 32)
+    res, bw, prof = _dedicate(MIXED, conf, Budget(
+        sa_seconds=60.0, sa_iters=60, n_chains=2, backend=backend,
+        hierarchical=True))
+    (_, coarse), (_, refined) = res.trace[0], res.trace[-1]
+    assert refined <= coarse
+    assert res.latency == refined
+    # the reported latency is the true simulated latency of the mapping
+    eng = DedicationEngine(conf, bw, prof, MIXED)
+    assert res.latency == eng.score(res.perm)
+    assert res.latency == pipette_latency(conf, res.mapping, bw, prof,
+                                          MIXED)
+    assert np.array_equal(res.mapping,
+                          perm_to_mapping(res.perm, conf))
+
+
+def test_single_island_hierarchical_degenerates_to_flat():
+    """On a spec that decomposes into one island, hierarchical=True and
+    False must be byte-identical — same RNG stream, same trajectory."""
+    conf = Conf(2, 2, 2, 8, 32)
+    kw = dict(sa_seconds=60.0, sa_iters=50, n_chains=2, backend="numpy")
+    a, _, _ = _dedicate(UNIFORM, conf, Budget(hierarchical=True, **kw))
+    b, _, _ = _dedicate(UNIFORM, conf, Budget(hierarchical=False, **kw))
+    assert a.latency.hex() == b.latency.hex()
+    assert np.array_equal(a.perm, b.perm)
+    assert a.trace == b.trace
+    assert a.chain_latencies == b.chain_latencies
+
+
+def test_hierarchical_auto_threshold():
+    """hierarchical=None resolves by fleet size (>= HIER_AUTO_GPUS)."""
+    assert HIER_AUTO_GPUS == 2048
+    conf = Conf(2, 2, 2, 8, 32)
+    kw = dict(sa_seconds=60.0, sa_iters=30, n_chains=1, backend="numpy")
+    auto, _, _ = _dedicate(UNIFORM, conf, Budget(hierarchical=None, **kw))
+    flat, _, _ = _dedicate(UNIFORM, conf, Budget(hierarchical=False, **kw))
+    assert auto.latency.hex() == flat.latency.hex()
+    assert np.array_equal(auto.perm, flat.perm)

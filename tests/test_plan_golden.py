@@ -1,8 +1,8 @@
-"""Golden-file contract for the serialized Plan schema (version 2).
+"""Golden-file contract for the serialized Plan schema (version 3).
 
 Three locks:
 
-1. the checked-in fixture (``tests/data/golden_plan_v2.json``) loads and
+1. the checked-in fixture (``tests/data/golden_plan_v3.json``) loads and
    re-serializes **byte-for-byte** — the wire format cannot drift silently;
 2. regenerating the same request live reproduces the fixture bytes —
    plans are deterministic artifacts, not process-local snapshots;
@@ -18,18 +18,20 @@ import pytest
 from repro.core import Plan, profile_bandwidth
 from repro.core.plan import PLAN_SCHEMA_VERSION
 
-GOLDEN = Path(__file__).parent / "data" / "golden_plan_v2.json"
+GOLDEN = Path(__file__).parent / "data" / "golden_plan_v3.json"
 
-#: Every key path of the version-2 schema.  ``[]`` marks list elements.
+#: Every key path of the version-3 schema.  ``[]`` marks list elements.
 #: CHANGING THIS SET == CHANGING THE WIRE FORMAT: bump PLAN_SCHEMA_VERSION,
 #: regenerate the fixture, and rename it (golden_plan_v<N>.json).
-SCHEMA_V2_PATHS = frozenset({
+SCHEMA_V3_PATHS = frozenset({
     "best.conf.bs_global", "best.conf.bs_micro", "best.conf.cp",
     "best.conf.dp", "best.conf.pp", "best.conf.tp", "best.latency",
     "best.mapping.data[]", "best.mapping.dtype", "best.mapping.shape[]",
     "best.mem_pred",
     "overhead.n_candidates", "overhead.n_enumerated",
-    "provenance.bs_global", "provenance.budget.n_chains",
+    "provenance.bs_global",
+    "provenance.budget.backend", "provenance.budget.hierarchical",
+    "provenance.budget.n_chains",
     "provenance.budget.sa_iters", "provenance.budget.sa_seconds",
     "provenance.budget.sa_topk", "provenance.bw_digest",
     "provenance.cluster", "provenance.estimator", "provenance.model",
@@ -69,6 +71,9 @@ def test_golden_plan_loads_and_roundtrips_byte_for_byte():
     tiers = plan.provenance.tiers
     assert tiers is not None and len(tiers["digest"]) == 64
     assert {t["name"] for t in tiers["tiers"]} == {"a100", "v100"}
+    # the v3 additions: backend selection is recorded (null = legacy SA)
+    assert plan.provenance.budget.backend is None
+    assert plan.provenance.budget.hierarchical is None
 
 
 def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
@@ -84,22 +89,22 @@ def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
 
 def test_schema_version_must_bump_on_shape_change():
     live = _paths(json.loads(GOLDEN.read_text()))
-    if PLAN_SCHEMA_VERSION == 2:
-        assert live == SCHEMA_V2_PATHS, (
+    if PLAN_SCHEMA_VERSION == 3:
+        assert live == SCHEMA_V3_PATHS, (
             "the serialized Plan shape changed but PLAN_SCHEMA_VERSION is "
-            "still 2 — bump it, regenerate tests/data/golden_plan_v2.json "
-            "under the new name, and update SCHEMA_V2_PATHS\n"
-            f"added: {sorted(live - SCHEMA_V2_PATHS)}\n"
-            f"removed: {sorted(SCHEMA_V2_PATHS - live)}")
+            "still 3 — bump it, regenerate tests/data/golden_plan_v3.json "
+            "under the new name, and update SCHEMA_V3_PATHS\n"
+            f"added: {sorted(live - SCHEMA_V3_PATHS)}\n"
+            f"removed: {sorted(SCHEMA_V3_PATHS - live)}")
     else:
         pytest.fail(
-            "PLAN_SCHEMA_VERSION moved past 2: retire this guard by "
+            "PLAN_SCHEMA_VERSION moved past 3: retire this guard by "
             "pinning the new shape and fixture (see gen_golden_plan.py)")
 
 
 def test_loader_rejects_other_schema_versions():
     d = json.loads(GOLDEN.read_text())
-    for bad in (1, PLAN_SCHEMA_VERSION + 1, None):
+    for bad in (1, 2, PLAN_SCHEMA_VERSION + 1, None):
         d["version"] = bad
         with pytest.raises(ValueError, match="schema version"):
             Plan.from_json_dict(d)

@@ -1,0 +1,191 @@
+"""Property suite for the SA scoring engines.
+
+Three properties over *random* cluster specs (uniform / mixed-tier /
+degraded-host) and random move sequences:
+
+1. delta-scoring soundness — ``DedicationEngine.propose`` (the cached
+   incremental path) returns bit-exactly the value a fresh full
+   ``score`` of the moved permutation would, move after move;
+2. backend equivalence — the JAX engine scores the same trajectory
+   bit-identically to the NumPy engine (the pinned tolerance is *zero*
+   on CPU, where FMA contraction is disabled at compile time; rel 1e-12
+   elsewhere);
+3. reference fidelity — both agree with the pure-Python
+   ``pipette_latency_ref`` within rel 1e-12 (the scalar reference
+   associates differently, so bitwise equality is not expected).
+
+Every property runs twice: as a seeded exhaustive sweep (always on — the
+CI baseline) and as a Hypothesis fuzz (skipped when hypothesis is not
+installed) that searches a much wider spec/move space for violations."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterSpec, Conf, DedicationEngine, Workload,
+                        build_profile, make_move_plan, perm_to_mapping,
+                        pipette_latency_ref, profile_bandwidth)
+from repro.core.annealing import _move_numpy
+from repro.core.cluster import (A100_TIER, V100_TIER,
+                                degraded_host_spec, mixed_fleet_spec)
+from repro.configs.gpt_paper import GPT_3_1B
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+requires_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+
+# ---------------------------------------------------------------------------
+# random spec / conf generation (shared by both harnesses)
+# ---------------------------------------------------------------------------
+
+def _make_spec(kind: str, n_nodes: int, gpn: int, seed: int) -> ClusterSpec:
+    name = f"prop-{kind}-{n_nodes}x{gpn}-{seed}"
+    if kind == "uniform":
+        return ClusterSpec(name, n_nodes, gpus_per_node=gpn, seed=seed)
+    if kind == "mixed":
+        return mixed_fleet_spec(name, n_nodes,
+                                (A100_TIER, V100_TIER),
+                                gpus_per_node=gpn, seed=seed)
+    if kind == "degraded":
+        base = ClusterSpec(name, n_nodes, gpus_per_node=gpn, seed=seed)
+        return degraded_host_spec(base, degraded_frac=0.3, seed=seed)
+    raise AssertionError(kind)
+
+
+def _make_conf(n: int, seed: int) -> Conf:
+    """A random valid 4D factorization of ``n`` GPUs (cp kept <= 2)."""
+    rng = np.random.default_rng(seed)
+
+    def divisors(m):
+        return [d for d in range(1, m + 1) if m % d == 0]
+
+    pp = int(rng.choice(divisors(n)))
+    tp = int(rng.choice(divisors(n // pp)))
+    cp = int(rng.choice([c for c in divisors(n // (pp * tp)) if c <= 2]))
+    dp = n // (pp * tp * cp)
+    n_mb = int(rng.choice([1, 2, 4]))
+    return Conf(pp, tp, dp, 1, dp * n_mb, cp)
+
+
+def _random_walk(spec, conf, seed, n_moves, check_jax):
+    """Walk ``n_moves`` random moves checking all three properties."""
+    bw, _ = profile_bandwidth(spec)
+    W = Workload(GPT_3_1B, 2048, conf.bs_global)
+    prof = build_profile(W, spec, conf)
+    eng = DedicationEngine(conf, bw, prof, spec)
+    fresh = DedicationEngine(conf, bw, prof, spec)
+    jeng = None
+    if check_jax:
+        from repro.core.jax_engine import JaxDedicationEngine
+        jeng = JaxDedicationEngine([conf], [prof], bw, spec)
+
+    rng = np.random.default_rng(seed)
+    n = conf.n_gpus
+    perm = rng.permutation(n)
+    cur = eng.score(perm)
+    for _ in range(n_moves):
+        kind = int(rng.integers(3))
+        pa = int(rng.integers(n))
+        pb = int(rng.integers(n - 1))
+        pb += pb >= pa
+        cand, touched = _move_numpy(perm, kind, pa, pb)
+        val, pending = eng.propose(cand, touched)
+        # 1. incremental == full re-score, bitwise
+        assert float(val).hex() == float(fresh.score(cand)).hex(), \
+            (spec.name, conf, kind, pa, pb)
+        if jeng is not None:
+            # 2. JAX backend parity (bit-exact on CPU, see module doc)
+            got = jeng.score(cand)
+            import jax
+            if jax.default_backend() == "cpu":
+                assert float(got).hex() == float(val).hex()
+            else:
+                assert got == pytest.approx(val, rel=1e-12)
+        # 3. the scalar reference agrees to 1e-12
+        ref = pipette_latency_ref(conf, perm_to_mapping(cand, conf), bw,
+                                  prof, spec)
+        assert val == pytest.approx(ref, rel=1e-12)
+        if val < cur:                # greedy walk keeps states diverse
+            eng.commit(pending)
+            perm, cur = cand, val
+
+
+# ---------------------------------------------------------------------------
+# seeded sweep (always on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "mixed", "degraded"])
+@pytest.mark.parametrize("n_nodes,gpn", [(4, 2), (3, 4), (8, 2)])
+def test_property_walk_seeded(kind, n_nodes, gpn):
+    pytest.importorskip("jax")
+    seed = n_nodes * 101 + gpn
+    spec = _make_spec(kind, n_nodes, gpn, seed)
+    conf = _make_conf(spec.n_gpus, seed + 1)
+    _random_walk(spec, conf, seed + 2, n_moves=12, check_jax=True)
+
+
+def test_numpy_walk_without_jax():
+    """The NumPy-only properties hold regardless of jax availability."""
+    spec = _make_spec("mixed", 6, 2, 77)
+    conf = _make_conf(spec.n_gpus, 78)
+    _random_walk(spec, conf, 79, n_moves=10, check_jax=False)
+
+
+def test_move_plan_thresholds_reproduce_log_draws():
+    """The precomputed accept thresholds are exactly ``-log(u)`` of the
+    per-chain RNG stream — the device-side accept rule
+    ``delta < temp * thresh`` is the host rule ``u < exp(-delta/temp)``."""
+    plan = make_move_plan([12], 40, 2, seed=5)
+    for k in range(2):
+        rng = np.random.default_rng(5 * 100003 + k)
+        # replay the draw order: probes first, then iteration draws
+        rng.integers(3, size=plan.n_probes)
+        rng.integers(12, size=plan.n_probes)
+        rng.integers(11, size=plan.n_probes)
+        t = plan.kind.shape[1]
+        rng.integers(3, size=t)
+        rng.integers(12, size=t)
+        rng.integers(11, size=t)
+        u = rng.random(t)
+        assert np.array_equal(plan.thresh[k], -np.log(u))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz (wider space; skipped when the package is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    spec_kinds = st.sampled_from(["uniform", "mixed", "degraded"])
+    node_counts = st.integers(min_value=2, max_value=8)
+    gpns = st.sampled_from([1, 2, 4])
+    seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+    @requires_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(kind=spec_kinds, n_nodes=node_counts, gpn=gpns, seed=seeds)
+    def test_property_walk_fuzzed(kind, n_nodes, gpn, seed):
+        pytest.importorskip("jax")
+        spec = _make_spec(kind, n_nodes, gpn, seed % 10_000)
+        conf = _make_conf(spec.n_gpus, seed + 1)
+        _random_walk(spec, conf, seed + 2, n_moves=6, check_jax=True)
+
+    @requires_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(min_value=4, max_value=64), seed=seeds)
+    def test_move_semantics_fuzzed(n, seed):
+        """_move_numpy always yields a permutation and touched covers
+        every changed position."""
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(n)
+        kind = int(rng.integers(3))
+        pa = int(rng.integers(n))
+        pb = int(rng.integers(n - 1))
+        pb += pb >= pa
+        moved, touched = _move_numpy(perm, kind, pa, pb)
+        assert np.array_equal(np.sort(moved), np.arange(n))
+        changed = np.nonzero(moved != perm)[0]
+        assert set(changed.tolist()) <= set(np.asarray(touched).tolist())
