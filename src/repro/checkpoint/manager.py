@@ -3,8 +3,14 @@ and resume (fault-tolerance substrate).
 
 Layout:  <dir>/step_<N>/
            arrays.npz      flattened leaves (gathered to host)
-           meta.json       tree structure, step, dtypes, wall time
+           meta.json       tree structure, step, dtypes, optional timestamp
          <dir>/LATEST      atomically-renamed pointer file
+
+Manifests are byte-reproducible by default: ``save`` takes an *injectable*
+``timestamp`` (``None`` unless the caller passes one), so two identical
+deterministic runs emit identical ``meta.json`` files.  Callers that want
+wall time in the manifest pass ``timestamp=time.time()`` explicitly —
+the clock read happens at the call site, never inside this module.
 
 Restore reshards onto the current mesh via device_put with the target
 shardings — this is what makes elastic re-plans (different G after a node
@@ -17,7 +23,6 @@ import json
 import os
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
@@ -58,11 +63,15 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
 
     # -- save ---------------------------------------------------------
-    def save(self, step: int, tree: Any, *, block: bool = False) -> Path:
+    def save(self, step: int, tree: Any, *, block: bool = False,
+             timestamp: Optional[float] = None) -> Path:
+        """Write ``step_<step>/``.  ``timestamp`` is recorded verbatim in
+        the manifest (``None`` by default — a wall-clock read here would
+        make byte-identical training runs emit differing checkpoints)."""
         arrays, dtypes, treedef = _flatten(tree)   # gathers to host
         meta = {"step": int(step), "treedef": str(treedef),
                 "n_leaves": len(arrays), "dtypes": dtypes,
-                "time": time.time()}
+                "time": timestamp}
 
         def _write():
             tmp = self.dir / f".tmp_step_{step}"

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import time
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
@@ -198,9 +199,23 @@ def compute_slowdowns(spec: ClusterSpec) -> Optional[np.ndarray]:
     if not spec.tiers:
         return None
     slow = (spec.gpu_flops * spec.efficiency) / spec.per_gpu_throughput()
-    if np.all(slow == 1.0):
+    if np.all(slow == 1.0):  # repro: noqa DET005 -- designed degeneration test: a tier built from the reference scalars divides to exactly 1.0, and only that exact case may take the scalar path
         return None
     return slow
+
+
+def tier_table_fingerprint(tiers, node_tiers) -> str:
+    """SHA-256 of a raw tier table + node assignment.
+
+    One hash recipe shared by :func:`tier_fingerprint` (live specs) and
+    the static plan verifier (serialized provenance) — each entry is a
+    ``(flops, mem, efficiency, name)`` tuple, hashed in table order,
+    followed by the node -> tier index tuple."""
+    h = hashlib.sha256()
+    for flops, mem, efficiency, name in tiers:
+        h.update(repr((flops, mem, efficiency, name)).encode())
+    h.update(repr(tuple(int(t) for t in node_tiers)).encode())
+    return h.hexdigest()
 
 
 def tier_fingerprint(spec: ClusterSpec) -> Optional[str]:
@@ -209,11 +224,9 @@ def tier_fingerprint(spec: ClusterSpec) -> Optional[str]:
     matched against the fleet composition it was computed for."""
     if not spec.tiers:
         return None
-    h = hashlib.sha256()
-    for t in spec.tiers:
-        h.update(repr((t.flops, t.mem, t.efficiency, t.name)).encode())
-    h.update(repr(tuple(int(t) for t in spec.node_tiers)).encode())
-    return h.hexdigest()
+    return tier_table_fingerprint(
+        [(t.flops, t.mem, t.efficiency, t.name) for t in spec.tiers],
+        spec.node_tiers)
 
 
 def mixed_fleet_spec(name: str, n_nodes: int,
@@ -249,14 +262,16 @@ def mixed_fleet_spec(name: str, n_nodes: int,
         fractions = [1.0 / len(tiers)] * len(tiers)
     if len(fractions) != len(tiers) or any(f < 0 for f in fractions):
         raise ValueError("fractions must be non-negative, one per tier")
-    total = float(sum(fractions))
+    # fsum: the normalizer must not depend on the order the caller lists
+    # tiers in (a left-fold sum would round differently per permutation)
+    total = math.fsum(fractions)
     if total <= 0:
         raise ValueError("fractions must sum to a positive value")
     counts = [int(f / total * n_nodes) for f in fractions]
     # remainder nodes go to the leading tiers the caller actually asked
     # for — a tier with fraction 0.0 must stay absent from the fleet
     present = [i for i, f in enumerate(fractions) if f > 0]
-    for k in range(n_nodes - sum(counts)):
+    for k in range(n_nodes - sum(counts)):  # repro: noqa DET004 -- counts are ints; integer sum is exact in any order
         counts[present[k % len(present)]] += 1
     assignment = np.repeat(np.arange(len(tiers)), counts)
     rng = np.random.default_rng(seed * 999983 + 7)

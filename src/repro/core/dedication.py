@@ -374,10 +374,10 @@ class DedicationEngine:
         # sym is finite exactly on distinct same-node pairs, so the same-node
         # mask falls out of the float gather (+1 restores the self member)
         same = np.isfinite(sym)
-        counts = same.sum(axis=2) + 1
+        counts = same.sum(axis=2) + 1  # repro: noqa DET003 -- boolean mask count: integer reduction, exact in any association order
         intra = (self._intra_coef[counts] / member_min).max(axis=1)
         is_rep = ~(same & self._jlt_dp).any(axis=2)
-        n_reps = is_rep.sum(axis=1)
+        n_reps = is_rep.sum(axis=1)  # repro: noqa DET003 -- boolean mask count: integer reduction, exact in any association order
         pair = is_rep[:, :, None] & is_rep[:, None, :]
         rep_min = np.where(pair, self._bw_noself[ii, jj], np.inf) \
             .min(axis=(1, 2))

@@ -306,10 +306,10 @@ class JaxDedicationEngine:
         sym = env["sym_intra"][ii, jj]
         member_min = sym.min(axis=2)
         same = jnp.isfinite(sym)
-        counts = same.sum(axis=2) + 1
+        counts = same.sum(axis=2) + 1  # repro: noqa DET003 -- boolean mask count: integer reduction, exact in any association order
         intra = (env["intra_coef"][counts] / member_min).max(axis=1)
         is_rep = ~(same & env["jlt"]).any(axis=2)
-        n_reps = is_rep.sum(axis=1)
+        n_reps = is_rep.sum(axis=1)  # repro: noqa DET003 -- boolean mask count: integer reduction, exact in any association order
         pair = is_rep[:, :, None] & is_rep[:, None, :]
         rep_min = jnp.where(pair, env["bw_noself"][ii, jj],
                             jnp.inf).min(axis=(1, 2))

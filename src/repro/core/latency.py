@@ -236,7 +236,7 @@ def _hetero_combine(conf: Conf, prof: Profile, t_cm: float, t_pp: float,
          else np.ones(conf.pp))
     c_x = c * w * stage_scale
     c_max = float(c_x.max())
-    c_sum = float(c_x.sum())
+    c_sum = float(c_x.sum())  # repro: noqa DET003 -- this IS the reference pairwise reduction: np_pairwise_sum replays ndarray.sum's association order element for element, pinned bit-exact in tests/test_jax_engine.py
     t_bubble = conf.pp * (c_max + t_cm) + t_pp
     return (t_bubble * (conf.n_mb / conf.pp) + (c_sum - c_max)
             + (conf.pp - 1) * t_cm + t_dp)

@@ -94,7 +94,7 @@ class Costs:
 
     @property
     def total_collective(self) -> float:
-        return sum(self.collective_bytes.values())
+        return sum(self.collective_bytes.values())  # repro: noqa DET004 -- fold order is the dict's insertion order, fixed by the HLO text; identical module -> identical fold
 
 
 def _split_operands_attrs(rest: str) -> Tuple[str, str]:
@@ -200,7 +200,7 @@ def _operand_shapes(op: Op, shapes: Dict[str, str]) -> List[str]:
 
 
 def _operand_bytes(op: Op, shapes: Dict[str, str]) -> int:
-    return sum(_shape_bytes(s) for s in _operand_shapes(op, shapes))
+    return sum(_shape_bytes(s) for s in _operand_shapes(op, shapes))  # repro: noqa DET004 -- _shape_bytes returns int byte counts; integer sum is exact in any order
 
 
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:

@@ -53,7 +53,7 @@ def main(argv=None):
     prompts = jax.random.randint(key, (args.batch, s_text), 0,
                                  cfg.vocab_size, jnp.int32)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     last_logits, cache = jax.jit(
         lambda p, t, i: M.prefill(p, cfg, ctx, t, i),
         static_argnums=())(params, prompts, img)
@@ -69,19 +69,19 @@ def main(argv=None):
                 out[k] = v
         return out
     cache = grow(cache)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     step = jax.jit(make_decode_step(cfg, ctx), donate_argnums=(1,))
     tok = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     toks = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     pos0 = args.prompt_len if cfg.frontend != "vlm" else s_text + cfg.n_img_tokens
     for i in range(args.gen - 1):
         tok, logits, cache = step(params, cache, tok, jnp.int32(pos0 + i))
         toks.append(tok)
     gen = jnp.concatenate(toks, axis=1)
     gen.block_until_ready()
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     print(f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} in "
           f"{t_prefill:.2f}s; decoded {args.gen-1} steps in {t_decode:.2f}s "
           f"({t_decode/max(args.gen-1,1)*1e3:.0f} ms/tok)")

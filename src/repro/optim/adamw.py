@@ -41,7 +41,7 @@ class AdamW:
     def update(self, grads, state: AdamWState, params):
         g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         if self.grad_clip > 0:
-            norm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+            norm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))  # repro: noqa DET004 -- fold order is the treedef's leaf order, fixed for a given model; the whole expression compiles into one jitted graph
             scale = jnp.minimum(1.0, self.grad_clip / (norm + 1e-9))
             g32 = jax.tree.map(lambda g: g * scale, g32)
         step = state.step + 1

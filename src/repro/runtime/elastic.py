@@ -54,7 +54,7 @@ def _estimator_stale(est: MemoryEstimator, spec: ClusterSpec,
     before."""
     if max_cp > 1 and not est.with_cp:
         return True
-    if est.fit_gpu_mem == 0.0 and est.fit_gpus_per_node == 0:
+    if est.fit_gpu_mem == 0.0 and est.fit_gpus_per_node == 0:  # repro: noqa DET005 -- 0.0 is the exact stored legacy-provenance sentinel, assigned literally and never computed
         return False
     return (est.fit_gpu_mem != spec.gpu_mem or
             est.fit_gpus_per_node != spec.gpus_per_node)

@@ -1,0 +1,10 @@
+"""Suppression fixture: one malformed noqa, one unused noqa."""
+import time
+
+
+def stamp():
+    return time.time()  # repro: noqa
+
+
+def quiet():
+    return 7  # repro: noqa DET001 -- nothing to suppress on this line

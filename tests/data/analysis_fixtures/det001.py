@@ -1,0 +1,6 @@
+"""DET001 fixture: legacy process-global RNG draw."""
+import numpy as np
+
+
+def roll():
+    return np.random.rand(3)

@@ -1,0 +1,6 @@
+"""DET002 fixture: wall-clock read reaching a returned value."""
+import time
+
+
+def manifest():
+    return {"stamp": time.time()}

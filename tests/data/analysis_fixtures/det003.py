@@ -1,0 +1,6 @@
+"""DET003 fixture: plain array sum where pairwise order must be pinned."""
+import numpy as np
+
+
+def stage_total(c_x):
+    return float(np.sum(c_x))

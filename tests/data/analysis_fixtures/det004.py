@@ -1,0 +1,5 @@
+"""DET004 fixture: builtin left-fold sum over floats."""
+
+
+def normalize(fractions):
+    return float(sum(fractions))

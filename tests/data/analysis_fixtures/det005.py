@@ -1,0 +1,5 @@
+"""DET005 fixture: exact float-literal equality on a computed value."""
+
+
+def is_unit(x):
+    return x * x == 1.0

@@ -1,0 +1,8 @@
+"""DET006 fixture: set iteration feeding order-sensitive accumulation."""
+
+
+def gather(xs):
+    out = []
+    for x in set(xs):
+        out.append(x * 2.0)
+    return out

@@ -1,0 +1,8 @@
+"""DET007 fixture: host-side effect inside a jitted function."""
+import jax
+
+
+@jax.jit
+def step(x):
+    print("tracing", x)
+    return x * 2

@@ -1,0 +1,6 @@
+"""Exclusion fixture: has a violation but the config excludes this file."""
+import numpy as np
+
+
+def roll():
+    return np.random.rand(2)

@@ -1,0 +1,6 @@
+"""Suppression fixture: a real finding silenced with a reasoned noqa."""
+import time
+
+
+def overhead():
+    return time.time()  # repro: noqa DET002 -- fixture exercising reasoned suppressions

@@ -1,0 +1,232 @@
+"""Tests for the determinism linter (``repro.analysis``).
+
+Covers: one fixture file per rule, golden JSON diagnostics, suppression
+handling (valid / malformed / unused), config scoping and exclusion,
+escape hatches, the CLI, and — the acceptance gate — that ``src/`` lints
+clean under the repo's own ``pyproject.toml`` with every suppression
+carrying a reason.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    RULES,
+    lint_file,
+    lint_paths,
+    load_config,
+    render_json,
+    render_text,
+)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.linter import lint_source
+
+TESTS = Path(__file__).resolve().parent
+REPO = TESTS.parent
+FIXTURES = TESTS / "data" / "analysis_fixtures"
+
+
+@pytest.fixture(scope="module")
+def fixture_config():
+    return load_config(FIXTURES / "fixture_pyproject.toml")
+
+
+def _open_rules(diags):
+    return sorted(d.rule for d in diags if not d.suppressed)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_rule_registry_is_complete():
+    expected = {f"DET{i:03d}" for i in range(1, 8)}
+    expected |= {"SYN001", "SUP001", "SUP002"}
+    assert set(RULES) == expected
+    for rule_id, rule in RULES.items():
+        assert rule.id == rule_id
+        assert rule.name and rule.summary
+
+
+# ------------------------------------------------- one violation per rule
+
+@pytest.mark.parametrize("rule_id, fname", [
+    ("DET001", "det001.py"),
+    ("DET002", "det002.py"),
+    ("DET003", "det003.py"),
+    ("DET004", "det004.py"),
+    ("DET005", "det005.py"),
+    ("DET006", "det006.py"),
+    ("DET007", "det007.py"),
+])
+def test_fixture_flags_exactly_its_rule(rule_id, fname, fixture_config):
+    diags = lint_file(FIXTURES / fname, fixture_config)
+    assert _open_rules(diags) == [rule_id]
+
+
+def test_syntax_error_is_a_diagnostic_not_a_crash():
+    diags = lint_source("def broken(:\n    pass\n", "broken.py")
+    assert _open_rules(diags) == ["SYN001"]
+
+
+# ------------------------------------------------------- golden JSON output
+
+def test_golden_json_diagnostics(fixture_config):
+    diags = lint_paths([FIXTURES], fixture_config, relative_to=FIXTURES)
+    got = render_json(diags)
+    expected = (FIXTURES / "expected.json").read_text(encoding="utf-8")
+    assert got == expected
+    # and it really is machine-readable
+    records = json.loads(got)
+    assert all(set(r) >= {"path", "line", "col", "rule", "message",
+                          "suppressed", "reason"} for r in records)
+
+
+def test_excluded_file_is_skipped(fixture_config):
+    diags = lint_paths([FIXTURES], fixture_config, relative_to=FIXTURES)
+    assert not any(d.path == "excluded.py" for d in diags)
+    # same file, default config (no exclusion) -> DET001 fires
+    diags = lint_file(FIXTURES / "excluded.py", AnalysisConfig())
+    assert _open_rules(diags) == ["DET001"]
+
+
+# ------------------------------------------------------------- suppressions
+
+def test_reasoned_suppression_silences_and_records_reason(fixture_config):
+    diags = lint_file(FIXTURES / "suppressed.py", fixture_config)
+    assert _open_rules(diags) == []
+    sup = [d for d in diags if d.suppressed]
+    assert len(sup) == 1
+    assert sup[0].rule == "DET002"
+    assert sup[0].reason == "fixture exercising reasoned suppressions"
+
+
+def test_malformed_and_unused_suppressions_are_findings(fixture_config):
+    diags = lint_file(FIXTURES / "bad_suppress.py", fixture_config)
+    # the reason-less noqa does NOT suppress, and is itself flagged;
+    # the noqa with no matching finding is flagged as stale
+    assert _open_rules(diags) == ["DET002", "SUP001", "SUP002"]
+
+
+def test_suppression_must_name_the_right_rule():
+    src = ("import time\n"
+           "t = time.time()  # repro: noqa DET001 -- wrong rule named\n")
+    diags = lint_source(src, "mod.py")
+    # DET002 stays open, and the DET001 noqa is unused
+    assert _open_rules(diags) == ["DET002", "SUP002"]
+
+
+def test_noqa_in_docstring_or_string_is_ignored():
+    src = '"""docs mention # repro: noqa DET001 -- example"""\nx = 1\n'
+    assert lint_source(src, "mod.py") == []
+
+
+# ------------------------------------------------------------ escape hatches
+
+def test_det004_integer_escapes():
+    assert _open_rules(lint_source(
+        "xs = [[1], [2, 3]]\nn = sum(len(x) for x in xs)\n", "m.py")) == []
+    assert _open_rules(lint_source(
+        "n = sum(1 for _ in range(5))\n", "m.py")) == []
+    assert _open_rules(lint_source(
+        "xs = [0.5, 0.25]\ns = sum(x for x in xs)\n", "m.py")) == ["DET004"]
+
+
+def test_det003_scoping_and_int_escape():
+    cfg = AnalysisConfig(det003_paths=("scored.py",))
+    src = "def f(a):\n    return float(a.sum())\n"
+    assert _open_rules(lint_source(src, "scored.py", cfg)) == ["DET003"]
+    assert _open_rules(lint_source(src, "elsewhere.py", cfg)) == []
+    # integer reductions are exact in any association order
+    src_int = "def f(mask):\n    return int(mask.sum())\n"
+    assert _open_rules(lint_source(src_int, "scored.py", cfg)) == []
+
+
+def test_det002_allows_monotonic_timers():
+    src = ("import time\n"
+           "t0 = time.perf_counter()\n"
+           "t1 = time.monotonic()\n")
+    assert lint_source(src, "m.py") == []
+
+
+def test_det006_order_free_consumers_are_fine():
+    assert _open_rules(lint_source(
+        "xs = [3, 1]\nm = max(set(xs))\n", "m.py")) == []
+    assert _open_rules(lint_source(
+        "xs = [3, 1]\nys = sorted(set(xs))\n", "m.py")) == []
+
+
+def test_import_alias_resolution():
+    src = ("from time import time as now\n"
+           "def f():\n"
+           "    return now()\n")
+    assert _open_rules(lint_source(src, "m.py")) == ["DET002"]
+    # a local shadowing the name kills the match
+    shadowed = ("def f(time):\n"
+                "    time = 0.0\n"
+                "    return time\n")
+    assert lint_source(shadowed, "m.py") == []
+
+
+def test_rule_disable_via_config():
+    cfg = AnalysisConfig(disable=frozenset({"DET005"}))
+    assert lint_source("def f(x):\n    return x == 1.0\n", "m.py", cfg) == []
+
+
+# --------------------------------------------------------------------- CLI
+
+def test_cli_exit_codes(capsys):
+    assert cli_main([str(FIXTURES / "det001.py"), "--no-config"]) == 1
+    capsys.readouterr()
+    assert cli_main([str(FIXTURES / "suppressed.py"), "--no-config"]) == 0
+    capsys.readouterr()
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "DET001" in out and "SUP002" in out
+    assert cli_main([]) == 2                       # no paths
+    assert cli_main(["/no/such/file.py"]) == 2
+    assert cli_main([str(FIXTURES / "det001.py"),
+                     "--select", "NOPE999"]) == 2
+
+
+def test_cli_select_narrows_rules(capsys):
+    rc = cli_main([str(FIXTURES / "det001.py"), "--no-config",
+                   "--select", "DET005"])
+    assert rc == 0
+    capsys.readouterr()
+
+
+def test_cli_json_output(capsys):
+    rc = cli_main([str(FIXTURES), "--format", "json",
+                   "--config", str(FIXTURES / "fixture_pyproject.toml"),
+                   "--relative-to", str(FIXTURES)])
+    assert rc == 1
+    records = json.loads(capsys.readouterr().out)
+    assert any(r["rule"] == "DET001" and r["path"] == "det001.py"
+               for r in records)
+    # JSON mode always includes suppressed findings, reasons attached
+    assert any(r["suppressed"] and r["reason"] for r in records)
+
+
+def test_render_text_shape(fixture_config):
+    diags = lint_file(FIXTURES / "det001.py", fixture_config,
+                      display_path="det001.py")
+    lines = render_text(diags)
+    assert lines == [
+        "det001.py:6:12: DET001 process-global legacy RNG "
+        "'numpy.random.rand': draws depend on hidden module state; use a "
+        "seeded np.random.default_rng(seed) passed explicitly"]
+
+
+# --------------------------------------------- the acceptance-criteria gate
+
+def test_src_tree_lints_clean_with_reasoned_suppressions():
+    """`python -m repro.analysis src/` must exit 0: zero unsuppressed
+    violations, and every suppression carries a reason."""
+    cfg = load_config(REPO / "pyproject.toml")
+    diags = lint_paths([REPO / "src"], cfg, relative_to=REPO)
+    open_diags = [d for d in diags if not d.suppressed]
+    assert open_diags == [], render_text(open_diags)
+    for d in diags:
+        if d.suppressed:
+            assert d.reason.strip(), f"reason-less suppression: {d}"

@@ -1,0 +1,186 @@
+"""Tests for the static plan verifier (``repro.plan lint``).
+
+The pristine golden fixture must pass; seeded mutations of it — corrupted
+mapping permutation, wrong digests, unknown schema version, out-of-memory
+confs, unschedulable pipelines — must each be flagged by the intended PLN
+rule, without re-running any search.
+"""
+import copy
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import verify_plan_dict, verify_plan_file
+from repro.core import profile_bandwidth
+from repro.core.cluster import A100_TIER, V100_TIER, mixed_fleet_spec
+
+TESTS = Path(__file__).resolve().parent
+GOLDEN = TESTS / "data" / "golden_plan_v3.json"
+
+# the live spec the golden fixture was generated against
+# (tests/data/gen_golden_plan.py)
+SPEC = mixed_fleet_spec("mixed-a100-v100-16x1", 16, (A100_TIER, V100_TIER),
+                        (0.5, 0.5), gpus_per_node=1, seed=47)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(GOLDEN.read_text(encoding="utf-8"))
+
+
+def _errors(issues):
+    return sorted({i.rule for i in issues if i.severity == "error"})
+
+
+# ------------------------------------------------------------ pristine plan
+
+def test_pristine_golden_passes(golden):
+    issues = verify_plan_dict(golden)
+    assert _errors(issues) == []
+    assert not any(i.severity == "warning" for i in issues)
+
+
+def test_pristine_golden_passes_against_live_spec(golden):
+    """With the generating spec and bandwidth matrix in hand, the digest
+    cross-checks go live and still pass."""
+    bw, _ = profile_bandwidth(SPEC)
+    issues = verify_plan_dict(golden, spec=SPEC, bw=bw)
+    assert _errors(issues) == []
+    # the bandwidth digest was actually checked against the matrix, so no
+    # format-only note (the golden has mem_pred=null, so a PLN005 note
+    # about the skipped OOM check is expected and fine)
+    assert not any("format only" in i.message for i in issues)
+
+
+def test_verify_plan_file_matches_dict_path(golden):
+    assert _errors(verify_plan_file(GOLDEN)) == []
+
+
+# -------------------------------------------------- seeded mutation classes
+
+def _mutate(golden, fn):
+    m = copy.deepcopy(golden)
+    fn(m)
+    return verify_plan_dict(m)
+
+
+def test_corrupted_mapping_duplicate_entry(golden):
+    def fn(m):
+        m["best"]["mapping"]["data"][0] = m["best"]["mapping"]["data"][1]
+    assert "PLN004" in _errors(_mutate(golden, fn))
+
+
+def test_corrupted_mapping_out_of_range_rank(golden):
+    def fn(m):
+        m["best"]["mapping"]["data"][3] = 999
+    assert "PLN004" in _errors(_mutate(golden, fn))
+
+
+def test_mapping_shape_conf_mismatch(golden):
+    def fn(m):
+        m["best"]["mapping"]["shape"] = [2, 2, 1, 4]
+    assert "PLN004" in _errors(_mutate(golden, fn))
+
+
+def test_unknown_schema_version(golden):
+    issues = _mutate(golden, lambda m: m.__setitem__("version", 99))
+    assert "PLN001" in _errors(issues)
+
+
+def test_wrong_tier_digest(golden):
+    def fn(m):
+        m["provenance"]["tiers"]["digest"] = "0" * 64
+    assert "PLN007" in _errors(_mutate(golden, fn))
+
+
+def test_wrong_bw_digest_format(golden):
+    def fn(m):
+        m["provenance"]["bw_digest"] = "not-a-sha256"
+    assert "PLN006" in _errors(_mutate(golden, fn))
+
+
+def test_bw_matrix_mismatch_against_live_matrix(golden):
+    bw, _ = profile_bandwidth(SPEC)
+    m = copy.deepcopy(golden)
+    issues = verify_plan_dict(m, spec=SPEC, bw=bw * 1.01)
+    assert "PLN006" in _errors(issues)
+
+
+def test_oom_conf_flagged(golden):
+    def fn(m):
+        m["best"]["mem_pred"] = 5.0e10          # > the 32 GB V100 floor
+    assert "PLN005" in _errors(_mutate(golden, fn))
+
+
+def test_unschedulable_pipeline(golden):
+    # golden best is pp=8; bs_micro=4 gives n_mb = 32/(4*dp) < pp
+    def fn(m):
+        m["best"]["conf"]["bs_micro"] = 4
+    assert "PLN003" in _errors(_mutate(golden, fn))
+
+
+def test_degree_product_mismatch(golden):
+    def fn(m):
+        m["best"]["conf"]["tp"] = 2             # product != n_gpus now
+    errs = _errors(_mutate(golden, fn))
+    assert "PLN002" in errs
+
+
+def test_spec_cross_check(golden):
+    wrong = mixed_fleet_spec("mixed-a100-v100-16x1", 32,
+                             (A100_TIER, V100_TIER), (0.5, 0.5),
+                             gpus_per_node=1, seed=47)
+    issues = verify_plan_dict(golden, spec=wrong)
+    assert "PLN008" in _errors(issues)
+
+
+def test_ranked_candidates_are_checked_too(golden):
+    def fn(m):
+        m["ranked"][-1]["mapping"]["data"][0] = \
+            m["ranked"][-1]["mapping"]["data"][1]
+    issues = _mutate(golden, fn)
+    bad = [i for i in issues if i.rule == "PLN004"]
+    assert bad and all("ranked" in i.where for i in bad)
+
+
+def test_malformed_json_file(tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text("{not json", encoding="utf-8")
+    issues = verify_plan_file(p)
+    assert _errors(issues) == ["PLN000"]
+
+
+def test_infeasible_plan_is_not_an_error(golden):
+    m = copy.deepcopy(golden)
+    m["best"] = None
+    m["ranked"] = []
+    assert _errors(verify_plan_dict(m)) == []
+
+
+# --------------------------------------------------------------------- CLI
+
+def test_cli_lint_pristine_and_mutated(tmp_path, capsys):
+    from repro.plan import main as plan_main
+    assert plan_main(["lint", str(GOLDEN)]) == 0
+    captured = capsys.readouterr()
+    assert "OK" in captured.err                 # verdict line on stderr
+
+    m = json.loads(GOLDEN.read_text(encoding="utf-8"))
+    m["best"]["conf"]["bs_micro"] = 4
+    bad = tmp_path / "mutated.json"
+    bad.write_text(json.dumps(m), encoding="utf-8")
+    assert plan_main(["lint", str(bad)]) == 1
+    captured = capsys.readouterr()
+    assert "PLN003" in captured.out
+    assert "FAIL" in captured.err
+
+
+def test_cli_lint_json_format(capsys):
+    from repro.plan import main as plan_main
+    assert plan_main(["lint", str(GOLDEN), "--format", "json"]) == 0
+    issues = json.loads(capsys.readouterr().out)
+    assert isinstance(issues, list)
+    assert not any(i["severity"] == "error" for i in issues)
+    assert all({"rule", "severity", "where", "message"} <= set(i)
+               for i in issues)
