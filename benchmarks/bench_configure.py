@@ -213,6 +213,48 @@ def bench_hetero_dedication(*, quick: bool):
     return sim_aware < sim_blind
 
 
+def bench_partition(*, quick: bool):
+    """Phase D: DP layer partition vs the honest uniform split on the two
+    non-uniform-cost configs (hybrid-attention zamba2, MoE kimi-k2), both
+    played back in the discrete-event simulator at pp=8.  "Honest" means
+    the uniform side also runs through the per-stage cost path (an explicit
+    ceil-first :class:`Partition`), so the comparison isolates the split,
+    not the cost model.  Prints per-model simulated latencies and a PASS /
+    REGRESSION verdict (DP must be no slower than uniform on both)."""
+    from repro.core import make_partition, uniform_partition
+    from repro.configs.kimi_k2_1t_a32b import CONFIG as KIMI
+    from repro.configs.zamba2_7b import CONFIG as ZAMBA
+
+    spec = MID_RANGE.with_nodes(16)
+    bw_true = true_bandwidth_matrix(spec)
+    bs_global = 64 if quick else 256
+    ok = True
+    print()
+    print(f"# phase D: DP vs uniform layer partition on {spec.name} "
+          f"(pp=8, seq={SEQ}, bs_global={bs_global})")
+    print("model,partition,stage_layers,sim_latency_s")
+    for cfg in (ZAMBA, KIMI):
+        w = Workload(cfg, SEQ, bs_global)
+        conf = Conf(8, 4, 4, 2, bs_global)
+        m = default_mapping(conf)
+        part_u = uniform_partition(cfg.n_layers, conf.pp)
+        part_dp = make_partition(cfg, conf.pp, SEQ, "dp")
+        sim_u = measure(conf, m, w, spec, bw_true, seed=1,
+                        partition=part_u)
+        sim_dp = measure(conf, m, w, spec, bw_true, seed=1,
+                         partition=part_dp)
+        for label, part, sim in (("uniform", part_u, sim_u),
+                                 ("dp", part_dp, sim_dp)):
+            sizes = "/".join(str(s) for s in part.sizes)
+            print(f"{cfg.name},{label},{sizes},{sim:.6f}")
+        gain = (1 - sim_dp / sim_u) * 100
+        verdict = "PASS" if sim_dp <= sim_u else "REGRESSION"
+        print(f"{cfg.name}: dp vs uniform {gain:+.1f}% simulated "
+              f"({verdict})")
+        ok = ok and sim_dp <= sim_u
+    return ok
+
+
 # --------------------------------------------------------------------------
 # --huge: the 10k-GPU scaling curve (ISSUE 6)
 # --------------------------------------------------------------------------
@@ -392,6 +434,9 @@ def main() -> None:
     ap.add_argument("--mixed-tier", action="store_true",
                     help="run on the seeded mixed A100/V100 fleet and "
                          "report compute-aware vs compute-blind dedication")
+    ap.add_argument("--partition", action="store_true",
+                    help="run only phase D: DP vs uniform layer partition "
+                         "on the hybrid/MoE configs, simulated at pp=8")
     ap.add_argument("--huge", action="store_true",
                     help="run the 10k-GPU scaling curve instead of phases "
                          "A-C (see module docstring)")
@@ -417,6 +462,13 @@ def main() -> None:
 
     if args.huge:
         bench_huge(args)
+        return
+
+    if args.partition:
+        if not bench_partition(quick=args.quick):
+            raise SystemExit(
+                "partition regression: the DP split did not match or beat "
+                "the uniform split in the simulator")
         return
 
     if args.mixed_tier:

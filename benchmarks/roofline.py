@@ -82,7 +82,7 @@ def bench_rows():
         rows.append((f"roofline_{mesh}_worst_cell", 0.0,
                      f"{worst['cell']}:{worst['roofline_frac']:.3f}"))
         for b in ("compute", "memory", "collective"):
-            n = sum(r["bottleneck"] == b for r in live)
+            n = sum(r["bottleneck"] == b for r in live)  # repro: noqa DET004 -- counting booleans: integer addition is order-independent
             rows.append((f"roofline_{mesh}_{b}_bound_cells", 0.0, str(n)))
     return rows
 

@@ -26,6 +26,10 @@ PLN007   tier provenance: recorded digest must match the recorded
          table (and the spec's live fingerprint when a spec is given)
 PLN008   cluster mismatch: plan's n_gpus / cluster name vs the spec
          it is being checked against
+PLN009   partition/schedule: schedule name must be known, consistent
+         with the conf's vpp; a recorded partition must carry strictly
+         increasing boundaries covering exactly n_layers with
+         pp*vpp stage chunks
 =======  ===========================================================
 
 All checks run on the *raw JSON dict* — a plan that fails
@@ -51,7 +55,7 @@ class PlanIssue:
     """One verifier finding.
 
     Attributes:
-        rule: ``PLN000`` ... ``PLN008``.
+        rule: ``PLN000`` ... ``PLN009``.
         severity: ``error`` (gates), ``warning``, or ``note``.
         where: which artifact part ("best", "ranked[3]", "provenance").
         message: human-readable description.
@@ -158,6 +162,59 @@ def _check_mapping(mapping: dict, conf: dict, n_gpus: int,
                            f"mapping is not a permutation of the {n_gpus} "
                            f"GPU ids: some GPU is either unused or "
                            f"dedicated to two workers"))
+    return issues
+
+
+def _check_partition(cand: dict, where: str) -> List[PlanIssue]:
+    """PLN009: schedule name + vpp consistency + partition coverage."""
+    from ..core.partition import SCHEDULES
+
+    issues: List[PlanIssue] = []
+    conf = cand.get("conf")
+    if not isinstance(conf, dict):
+        return []                       # already a PLN000 elsewhere
+    try:
+        pp = int(conf.get("pp", 0))
+        vpp = int(conf.get("vpp", 1))
+    except (TypeError, ValueError):
+        return []                       # already a PLN000 elsewhere
+    schedule = cand.get("schedule", "1f1b")
+    if schedule not in SCHEDULES:
+        issues.append(_err("PLN009", where,
+                           f"unknown schedule {schedule!r}; this build "
+                           f"knows {SCHEDULES}"))
+        return issues
+    expected = "interleaved-1f1b" if vpp > 1 else "1f1b"
+    if schedule != expected:
+        issues.append(_err("PLN009", where,
+                           f"schedule {schedule!r} is inconsistent with "
+                           f"vpp={vpp}: expected {expected!r}"))
+    part = cand.get("partition")
+    if part is None:
+        return issues
+    try:
+        n_layers = int(part["n_layers"])
+        bounds = [int(b) for b in part["boundaries"]]
+    except (KeyError, TypeError, ValueError) as e:
+        issues.append(_err("PLN009", where,
+                           f"partition is malformed: {e!r}"))
+        return issues
+    if pp >= 1 and len(bounds) != pp * vpp:
+        issues.append(_err("PLN009", where,
+                           f"partition has {len(bounds)} stage chunks but "
+                           f"the conf implies pp*vpp = {pp * vpp}"))
+    if not bounds or bounds[0] < 1 \
+            or any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
+        issues.append(_err("PLN009", where,
+                           f"partition boundaries {bounds} must be "
+                           f"strictly increasing with every stage chunk "
+                           f"owning >= 1 layer"))
+    elif bounds[-1] != n_layers:
+        issues.append(_err("PLN009", where,
+                           f"partition boundaries end at {bounds[-1]} but "
+                           f"must cover exactly n_layers = {n_layers} — "
+                           f"some layers would be unassigned or assigned "
+                           f"twice"))
     return issues
 
 
@@ -310,6 +367,7 @@ def verify_plan_dict(d: dict, spec=None,
         issues.extend(_check_conf(cand["conf"], n_gpus, where))
         issues.extend(_check_mapping(cand["mapping"], cand["conf"],
                                      n_gpus, where))
+        issues.extend(_check_partition(cand, where))
         mem_pred = cand.get("mem_pred")
         if mem_pred is None:
             if where == "best":

@@ -17,6 +17,13 @@ stage by the slowest member GPU throughout the model, engine, and
 simulator.  Homogeneous specs keep the historical scalars bit-for-bit,
 and the baselines additionally stay compute-blind.
 
+Pipeline stages may carry non-uniform layer counts: ``partition.py``
+solves a balanced min-max dynamic program over per-layer cost vectors
+(``SearchSpace(partition="dp")``), and interleaved-1F1B virtual-pipeline
+scheduling opens via ``SearchSpace(max_vpp=...)``; the uniform split with
+plain 1F1B (``Conf.vpp == 1``, ``Profile.partition is None``) reproduces
+the historical estimates bit-for-bit.
+
 The public entry point is the Planner API (``plan.py``):
 ``Planner(strategy).plan(PlanRequest(...), bw)`` returns a serializable
 :class:`~repro.core.plan.Plan` artifact; the legacy ``configure()`` kwarg
@@ -28,6 +35,9 @@ from .cluster import (ClusterSpec, DeviceTier, HIGH_END, MID_RANGE,
                       min_group_bw, min_group_bw_batch, mixed_fleet_spec,
                       profile_bandwidth, tier_fingerprint,
                       true_bandwidth_matrix)
+from .partition import (PARTITION_MODES, SCHEDULES, Partition,
+                        PartitionCache, balanced_partition, make_partition,
+                        resolve_partition, uniform_partition)
 from .simulator import (Conf, Profile, ProfileCache, Workload, build_profile,
                         default_mapping, dp_allreduce_times,
                         dp_allreduce_times_ref, measure)

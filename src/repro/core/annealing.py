@@ -376,7 +376,7 @@ def dedicate_candidates(survivors: Sequence[Conf],
     """Stage-5 dedication through the unified backend-selectable core.
 
     Runs SA dedication for the survivor indices in ``sa_idx`` and returns
-    ``{index: SAResult}``.  Candidates are grouped by (pp, tp, cp, dp)
+    ``{index: SAResult}``.  Candidates are grouped by (pp, tp, cp, dp, vpp)
     shape; the ``"jax"`` backend advances every chain of every candidate
     in a group with one vmapped dispatch, the ``"numpy"`` backend loops —
     both execute the identical :class:`MovePlan`, so results are
@@ -402,10 +402,13 @@ def dedicate_candidates(survivors: Sequence[Conf],
                           budget.n_chains, seed)
     orderings = coarse_orderings(islands, spec)
 
-    groups: Dict[Tuple[int, int, int, int], List[int]] = {}
+    # vpp joins the shape key: vpp variants of one (pp, tp, cp, dp) carry
+    # different stage_work/partition profiles, which the engines share
+    # per group
+    groups: Dict[Tuple[int, int, int, int, int], List[int]] = {}
     for i in sa_idx:
         c = survivors[i]
-        groups.setdefault((c.pp, c.tp, c.cp, c.dp), []).append(i)
+        groups.setdefault((c.pp, c.tp, c.cp, c.dp, c.vpp), []).append(i)
 
     # The O(G^2) pair matrices depend only on (bw, spec): build them once
     # and share across every engine of every shape group (the jax groups

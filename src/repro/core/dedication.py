@@ -288,6 +288,14 @@ class DedicationEngine:
         # specs: the ablation/baseline that prices every GPU at reference
         # speed (the comparison point for the compute-aware win).
         self._slow = compute_slowdowns(spec) if compute_aware else None
+        # Non-uniform partitions / interleaved schedules need the per-stage
+        # combination even on homogeneous fleets (unit compute scales, but
+        # stage_work varies); mirrors latency._combine_eq34's trigger.
+        self._uniform_stage_scale = (
+            np.ones(conf.pp)
+            if self._slow is None and (prof.partition is not None
+                                       or conf.vpp > 1)
+            else None)
         # Pair matrices (the only O(G^2) state): shared via ``pairs`` when
         # the caller scores many candidates against one fleet, else built
         # here.  The cache must have been built from this same ``bw`` and
@@ -396,9 +404,12 @@ class DedicationEngine:
         t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * cscale
         t_pp = 0.0 if conf.pp == 1 else float(max(0.0, chain_vals.max()))
         t_dp = float(max(0.0, dp0_vals.max()))
+        if stage_vals is None:
+            stage_vals = self._uniform_stage_scale
         if stage_vals is not None:
-            # tiered cluster: shared per-stage combination (bit-identical
-            # to pipette_latency via the same _hetero_combine arithmetic)
+            # tiered cluster (or non-uniform partition / vpp > 1 with unit
+            # scales): shared per-stage combination (bit-identical to
+            # pipette_latency via the same _hetero_combine arithmetic)
             return _hetero_combine(conf, prof, t_cm, t_pp, t_dp, stage_vals)
         t_bubble = conf.pp * (c + t_cm) + t_pp
         t_straggler = (conf.pp - 1) * (c + t_cm)

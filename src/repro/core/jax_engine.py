@@ -176,18 +176,19 @@ class JaxDedicationEngine:
                  pairs: Optional[PairCache] = None,
                  device_pairs: Optional[dict] = None):
         conf = confs[0]
-        shape = (conf.pp, conf.tp, conf.cp, conf.dp)
+        shape = (conf.pp, conf.tp, conf.cp, conf.dp, conf.vpp)
         for c in confs[1:]:
-            if (c.pp, c.tp, c.cp, c.dp) != shape:
+            if (c.pp, c.tp, c.cp, c.dp, c.vpp) != shape:
                 raise ValueError("JaxDedicationEngine needs same-shape confs")
         p0 = profs[0]
         for p in profs[1:]:
-            assert (p.tp_ref_bw, p.cp_ref_bw, p.msg_dp,
-                    p.stage_work) == (p0.tp_ref_bw, p0.cp_ref_bw,
-                                      p0.msg_dp, p0.stage_work), \
+            assert (p.tp_ref_bw, p.cp_ref_bw, p.msg_dp, p.stage_work,
+                    p.partition, p.chunk_work) == \
+                (p0.tp_ref_bw, p0.cp_ref_bw, p0.msg_dp, p0.stage_work,
+                 p0.partition, p0.chunk_work), \
                 "profiles vary within shape; shared tensors invalid"
         self.confs = list(confs)
-        self.pp, self.tp, self.cp, self.dp = shape
+        self.pp, self.tp, self.cp, self.dp, self.vpp = shape
         self.n = conf.n_gpus
         self.nc = self.tp * self.cp * self.dp
         self.tpc = self.tp * self.cp
@@ -209,6 +210,10 @@ class JaxDedicationEngine:
              for c in range(self.dp + 1)])
         slow = compute_slowdowns(spec) if compute_aware else None
         self.tiered = slow is not None
+        # Non-uniform partitions / interleaved schedules need the per-stage
+        # combination even without device tiers (latency._combine_eq34's
+        # trigger, mirrored here so both backends stay bit-identical).
+        self.nonuniform = p0.partition is not None or conf.vpp > 1
 
         # per-candidate profile scalars (the vmapped axis); all arithmetic
         # on host NumPy f64 so the values equal the NumPy engine's
@@ -221,7 +226,8 @@ class JaxDedicationEngine:
             "tsum_cp": np.array([p.t_cp_fwd + p.t_cp_bwd for p in profs]),
             "hopf": np.array([2.0 * p.msg_pp for p in profs]),
             "r": np.array([c.n_mb / c.pp for c in confs]),
-            "cw": (c_arr[:, None] * w[None, :] if self.tiered else None),
+            "cw": (c_arr[:, None] * w[None, :]
+                   if self.tiered or self.nonuniform else None),
         }
 
         # device residency in f64 — arrays must be created inside the
@@ -318,14 +324,26 @@ class JaxDedicationEngine:
 
         t_tp = sc["tsum_tp"] * tp_scale
         t_cm = t_tp + sc["tsum_cp"] * cp_scale
-        if self.tiered:
-            sv = self._group_max(env["slow"][perm.reshape(pp, nc)])
-            c_x = sc["cw"] * sv
+        if self.tiered or self.nonuniform:
+            if self.tiered:
+                sv = self._group_max(env["slow"][perm.reshape(pp, nc)])
+                c_x = sc["cw"] * sv
+            else:
+                # homogeneous fleet, non-uniform stage_work: the NumPy
+                # engine's stage scales are all 1.0, and cw * 1.0 == cw
+                # exactly, so using cw directly preserves bit parity
+                c_x = sc["cw"]
             c_max = c_x.max()
             c_sum = np_pairwise_sum(c_x, pp)
-            t_bubble = float(pp) * (c_max + t_cm) + t_pp
-            return ((t_bubble * sc["r"] + (c_sum - c_max))
-                    + float(pp - 1) * t_cm) + t_dp
+            if self.vpp == 1:
+                t_bubble = float(pp) * (c_max + t_cm) + t_pp
+                return ((t_bubble * sc["r"] + (c_sum - c_max))
+                        + float(pp - 1) * t_cm) + t_dp
+            # interleaved-1F1B: mirrors _hetero_combine's vpp branch in
+            # NumPy's left-to-right association order
+            t_bubble = float(pp) * (c_max + t_cm) + float(self.vpp) * t_pp
+            return ((t_bubble * sc["r"] + (c_sum - c_max) / float(self.vpp))
+                    + float(pp - 1) * t_cm / float(self.vpp)) + t_dp
         t_bubble = float(pp) * (sc["c"] + t_cm) + t_pp
         t_straggler = float(pp - 1) * (sc["c"] + t_cm)
         return (t_bubble * sc["r"] + t_straggler) + t_dp

@@ -230,6 +230,13 @@ def _hetero_combine(conf: Conf, prof: Profile, t_cm: float, t_pp: float,
     the scalar branch), so homogeneous results stay bit-identical.  This
     is what the dedication engine exploits: herding slow GPUs into few
     (and light) stages shrinks ``sum c_x`` and ``c_max``.
+
+    Interleaved-1F1B (``conf.vpp > 1``) shrinks the fill/drain terms by
+    ``1/vpp`` — each warmup slot is one *chunk*, not a full stage — while
+    paying the inter-stage hop ``vpp`` times per microbatch:
+
+        T = (pp * (c_max + t_cm) + vpp * t_pp) * (n_mb / pp)
+            + (sum_x c_x - c_max) / vpp + (pp - 1) * t_cm / vpp + t_dp
     """
     c = prof.c_fwd + prof.c_bwd
     w = (np.asarray(prof.stage_work) if prof.stage_work is not None
@@ -237,9 +244,14 @@ def _hetero_combine(conf: Conf, prof: Profile, t_cm: float, t_pp: float,
     c_x = c * w * stage_scale
     c_max = float(c_x.max())
     c_sum = float(c_x.sum())  # repro: noqa DET003 -- this IS the reference pairwise reduction: np_pairwise_sum replays ndarray.sum's association order element for element, pinned bit-exact in tests/test_jax_engine.py
-    t_bubble = conf.pp * (c_max + t_cm) + t_pp
-    return (t_bubble * (conf.n_mb / conf.pp) + (c_sum - c_max)
-            + (conf.pp - 1) * t_cm + t_dp)
+    if conf.vpp == 1:
+        t_bubble = conf.pp * (c_max + t_cm) + t_pp
+        return (t_bubble * (conf.n_mb / conf.pp) + (c_sum - c_max)
+                + (conf.pp - 1) * t_cm + t_dp)
+    t_bubble = conf.pp * (c_max + t_cm) + conf.vpp * t_pp
+    return (t_bubble * (conf.n_mb / conf.pp)
+            + (c_sum - c_max) / conf.vpp
+            + (conf.pp - 1) * t_cm / conf.vpp + t_dp)
 
 
 def _combine_eq34(conf: Conf, prof: Profile, tp_scale: float, t_pp: float,
@@ -252,10 +264,14 @@ def _combine_eq34(conf: Conf, prof: Profile, tp_scale: float, t_pp: float,
     configurations) the ring KV-exchange of context parallelism; at
     ``cp == 1`` the profiled ``t_cp_*`` terms are exactly 0, so the 3D
     value is reproduced bit-for-bit.  ``stage_scale`` (tiered clusters
-    only) switches to the per-stage :func:`_hetero_combine`."""
+    only) switches to the per-stage :func:`_hetero_combine`; a non-uniform
+    partition or interleaved schedule on a homogeneous fleet takes that
+    path too, with unit scales (per-stage work still differs)."""
     c = prof.c_fwd + prof.c_bwd
     t_tp = (prof.t_tp_fwd + prof.t_tp_bwd) * tp_scale
     t_cm = t_tp + (prof.t_cp_fwd + prof.t_cp_bwd) * cp_scale
+    if stage_scale is None and (prof.partition is not None or conf.vpp > 1):
+        stage_scale = np.ones(conf.pp)
     if stage_scale is not None:
         return _hetero_combine(conf, prof, t_cm, t_pp, t_dp, stage_scale)
     t_bubble = conf.pp * (c + t_cm) + t_pp
@@ -323,7 +339,9 @@ def default_mapping_latencies(confs: Sequence[Conf],
     out = np.empty(len(confs))
     cache = {}
     for i, (conf, prof) in enumerate(zip(confs, profiles)):
-        shape = (conf.pp, conf.tp, conf.cp, conf.dp)
+        # vpp is part of the shape key: stage_work/partition differ across
+        # vpp variants of the same (pp, tp, cp, dp)
+        shape = (conf.pp, conf.tp, conf.cp, conf.dp, conf.vpp)
         entry = cache.get(shape)
         if entry is None:
             m = default_mapping(conf)
@@ -334,10 +352,12 @@ def default_mapping_latencies(confs: Sequence[Conf],
             sscale = _stage_compute_scale(conf, m, spec)
             entry = cache[shape] = (scale, cscale, hop, t_dp, sscale,
                                     (prof.tp_ref_bw, prof.cp_ref_bw,
-                                     prof.msg_dp, prof.stage_work))
+                                     prof.msg_dp, prof.stage_work,
+                                     prof.partition, prof.chunk_work))
         scale, cscale, hop, t_dp, sscale, src_fields = entry
         assert (prof.tp_ref_bw, prof.cp_ref_bw, prof.msg_dp,
-                prof.stage_work) == src_fields, \
+                prof.stage_work, prof.partition,
+                prof.chunk_work) == src_fields, \
             f"profiles vary within shape {shape}; per-shape cache invalid"
         t_pp = 0.0 if conf.pp == 1 \
             else _t_pp_from_hops(conf, hop, prof.msg_pp)
@@ -368,6 +388,9 @@ def pipette_latency_ref(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
         for x in range(conf.pp):
             scale[x] = max(float(slow[int(g)]) for g in m4[x].flat)
         return _hetero_combine(conf, prof, t_cm, t_pp, t_dp, scale)
+    if prof.partition is not None or conf.vpp > 1:
+        return _hetero_combine(conf, prof, t_cm, t_pp, t_dp,
+                               np.ones(conf.pp))
     t_bubble = conf.pp * (c + t_cm) + t_pp
     t_straggler = (conf.pp - 1) * (c + t_cm)
     return t_bubble * (conf.n_mb / conf.pp) + t_straggler + t_dp

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
-from typing import Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -29,6 +29,7 @@ from ..models.config import ModelConfig
 from . import flops as F
 from .cluster import ClusterSpec
 from .mlp import mlp_forward_jit, pad_batch_rows
+from .partition import Partition, uniform_partition
 from .simulator import Conf, Workload, ring_kv_block_bytes
 
 
@@ -69,20 +70,106 @@ def _ring_kv_bytes(cfg: ModelConfig, conf: Conf, seq: int) -> float:
     return 2.0 * layers_stage * block
 
 
-def _config_residual(cfg: ModelConfig, conf: Conf, spec: ClusterSpec) -> float:
+def _config_residual(cfg: ModelConfig, conf: Conf, spec: ClusterSpec,
+                     partition: Optional[Partition] = None) -> float:
     """Reproducible 'library variance' component, up to 0.6 GB.
 
-    The hash key only grows a ``|cp`` segment for ``cp > 1`` so every 3D
-    configuration keeps its historical residual bit-for-bit."""
+    The hash key only grows ``|cp`` / ``|vpp`` / ``|part`` segments when
+    those degrees are active, so every 3D uniform-split configuration
+    keeps its historical residual bit-for-bit."""
     key = f"{cfg.name}|{conf.pp}|{conf.tp}|{conf.dp}|{conf.bs_micro}|{spec.name}"
     if conf.cp > 1:
         key += f"|cp{conf.cp}"
+    if conf.vpp > 1:
+        key += f"|vpp{conf.vpp}"
+    if partition is not None:
+        key += f"|part{','.join(str(b) for b in partition.boundaries)}"
     h = int(hashlib.sha1(key.encode()).hexdigest()[:8], 16)
     return (h % 1000) / 1000.0 * 0.6e9
 
 
-def ground_truth_memory(w: Workload, conf: Conf, spec: ClusterSpec) -> float:
-    """'Measured' peak bytes per GPU for this configuration."""
+def _stage_param_array(cfg: ModelConfig, part: Partition, pp: int,
+                       vpp: int) -> np.ndarray:
+    """Per-physical-stage resident parameter counts under a chunk
+    partition: stage ``x`` hosts chunks ``x, x + pp, ...`` plus the
+    weight-tied hybrid shared block (once, if any hosted layer applies
+    it), the embedding on stage 0, and the LM head + final norm on the
+    last stage."""
+    chunk_params = part.stage_sums(F.layer_param_counts(cfg))
+    stage_params = chunk_params.reshape(vpp, pp).sum(axis=0)
+    sb = float(F.shared_block_params(cfg))
+    if sb:
+        mask = F.attention_layer_mask(cfg).astype(np.float64)
+        has = (part.stage_sums(mask) > 0).reshape(vpp, pp).any(axis=0)
+        stage_params = stage_params + has * sb
+    embed = float(cfg.vocab_size * cfg.d_model)
+    stage_params[0] += embed
+    stage_params[pp - 1] += embed + cfg.d_model    # LM head + final norm
+    return stage_params
+
+
+def _layer_act_bytes(cfg: ModelConfig, seq: int, bs_micro: int) -> np.ndarray:
+    """Per-layer in-flight activation bytes of one microbatch: the
+    ``34 * d`` residual/MLP term on every layer, the ``5 * heads * seq``
+    score workspace only on layers that compute attention."""
+    per = np.full(cfg.n_layers, 34.0 * cfg.d_model)
+    per = per + F.attention_layer_mask(cfg) * \
+        (5.0 * max(cfg.n_heads, 1) * seq)
+    return seq * bs_micro * per
+
+
+def _ground_truth_nonuniform(w: Workload, conf: Conf, spec: ClusterSpec,
+                             partition: Optional[Partition]) -> float:
+    """Worst-stage peak bytes under a non-uniform partition and/or
+    interleaved-1F1B.  Per stage: resident weights from the true layer
+    assignment, in-flight activations with the per-chunk interleaved
+    multiplicity (chunk ``v`` of a stage keeps ``min(pp*vpp - v*pp - x,
+    n_mb)`` microbatches alive); the worst stage's total is the number
+    the capacity prune must respect."""
+    cfg = w.cfg
+    pp, vpp = conf.pp, conf.vpp
+    n_chunks = pp * vpp
+    part = partition if partition is not None \
+        else uniform_partition(cfg.n_layers, n_chunks)
+    weights_x = _stage_param_array(cfg, part, pp, vpp) / conf.tp \
+        * BYTES_PER_PARAM_STATE
+    chunk_act = part.stage_sums(_layer_act_bytes(cfg, w.seq, conf.bs_micro)) \
+        / conf.tp / conf.cp
+    v = np.arange(vpp)[:, None]
+    x = np.arange(pp)[None, :]
+    inflight = np.minimum(n_chunks - (v * pp + x), conf.n_mb)
+    acts_x = (chunk_act.reshape(vpp, pp) * inflight).sum(axis=0)
+    wa = float((weights_x + acts_x).max())
+
+    sizes = np.asarray(part.sizes).reshape(vpp, pp).sum(axis=0)
+    layers_stage = int(sizes.max())
+    ring_kv = 0.0
+    if conf.cp > 1:
+        block = ring_kv_block_bytes(cfg, conf.bs_micro, w.seq, conf.cp)
+        ring_kv = 2.0 * layers_stage * block
+    logits = conf.bs_micro * w.seq * cfg.vocab_size * 4.0 * 2 \
+        / conf.tp / conf.cp
+    framework = (1.1e9                                  # runtime context
+                 + 0.15e9                               # collective buffers
+                 + 8e6 * (conf.tp + conf.pp)            # per-communicator
+                 + 8e6 * (conf.cp - 1)                  # cp ring communicator
+                 + 8e6 * (conf.vpp - 1)                 # per-chunk buffers
+                 + 24e6 * np.log2(conf.dp + 1)          # ring channels
+                 + 0.45e9)                              # kernel workspace
+    frag = 0.06 * wa
+    residual = _config_residual(cfg, conf, spec, partition)
+    return wa + ring_kv + logits + framework + frag + residual
+
+
+def ground_truth_memory(w: Workload, conf: Conf, spec: ClusterSpec,
+                        partition: Optional[Partition] = None) -> float:
+    """'Measured' peak bytes per GPU for this configuration.
+
+    With a non-uniform ``partition`` (or ``conf.vpp > 1``) the peak is the
+    *worst stage's* (:func:`_ground_truth_nonuniform`); the default is the
+    bit-exact legacy uniform-split model."""
+    if partition is not None or conf.vpp > 1:
+        return _ground_truth_nonuniform(w, conf, spec, partition)
     cfg = w.cfg
     weights = _stage_params(cfg, conf.pp) / conf.tp * BYTES_PER_PARAM_STATE
     inflight = min(conf.pp, conf.n_mb)
@@ -232,7 +319,7 @@ class MemoryEstimator:
 
 def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
                     n_layers: int = 10 ** 9, max_cp: int = 1, seq: int = 0,
-                    strict: bool = True) -> List[Conf]:
+                    max_vpp: int = 1, strict: bool = True) -> List[Conf]:
     """All valid (pp, tp, cp, dp, bs_micro) with ``pp*tp*cp*dp == n_gpus``.
 
     With the default ``max_cp=1`` the context-parallel axis collapses and
@@ -252,6 +339,12 @@ def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
         max_cp: upper bound on context parallelism (1 = 3D space).
         seq: sequence length; required for ``max_cp > 1`` (ring attention
             needs ``seq % cp == 0``), ignored otherwise.
+        max_vpp: upper bound on the interleaved-1F1B virtual-pipeline
+            factor.  The default (1) emits only plain-1F1B configurations
+            in the historical order; larger values append, right after
+            each base configuration, its ``vpp`` variants that satisfy
+            Megatron's interleaving constraints (``pp > 1``,
+            ``n_mb % pp == 0``, ``n_layers >= pp * vpp``).
         strict: filter schedule-invalid ``n_mb < pp`` configurations.
 
     Returns:
@@ -283,6 +376,13 @@ def enumerate_confs(n_gpus: int, bs_global: int, *, max_tp: int = 0,
                     if strict and conf.n_mb < pp:
                         continue
                     out.append(conf)
+                    for vpp in range(2, max_vpp + 1):
+                        if pp <= 1 or pp * vpp > n_layers:
+                            continue
+                        cv = Conf(pp, tp, dp, mb, bs_global, cp=cp, vpp=vpp)
+                        if not cv.schedulable():
+                            continue
+                        out.append(cv)
     return out
 
 

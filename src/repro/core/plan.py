@@ -39,6 +39,7 @@ import numpy as np
 from .baselines import amp_configure, mlm_configure, varuna_configure
 from .cluster import ClusterSpec, tier_fingerprint
 from .memory import MemoryEstimator
+from .partition import PARTITION_MODES, Partition
 from .search import Candidate, Overhead, SearchResult, run_search
 from .simulator import Conf, Workload
 
@@ -48,9 +49,14 @@ from .simulator import Conf, Workload
 # 3: backend-selectable SA core — ``provenance.budget`` grows ``backend``
 #    (null = historical per-candidate driver, "numpy"/"jax" = the unified
 #    MovePlan core) and ``hierarchical`` (island search; null = auto by
-#    fleet size).  Any further change to the serialized shape MUST bump
+#    fleet size).
+# 4: non-uniform pipeline partitions + interleaved-1F1B — confs grow
+#    ``vpp``, candidates grow ``partition`` (the resolved stage-boundary
+#    artifact, null = uniform layering) and ``schedule`` ("1f1b" /
+#    "interleaved-1f1b"), ``provenance.space`` grows ``partition`` and
+#    ``max_vpp``.  Any further change to the serialized shape MUST bump
 #    this (tests/test_plan_golden.py enforces it).
-PLAN_SCHEMA_VERSION = 3
+PLAN_SCHEMA_VERSION = 4
 
 
 # ---------------------------------------------------------------------------
@@ -68,17 +74,30 @@ class SearchSpace:
             TP groups inside a node (``spec.gpus_per_node``).
         max_micro: skip configurations with ``bs_micro`` above this.
         fixed_micro: restrict to one microbatch size (ablations).
+        partition: layer-to-stage partitioning mode — ``"uniform"``
+            (the historical ceil-first split) or ``"dp"`` (the balanced
+            min-max dynamic program over per-layer cost vectors).
+        max_vpp: open interleaved-1F1B up to this many virtual pipeline
+            chunks per stage (1 — the default — is plain 1F1B only).
     """
     max_cp: int = 1
     max_tp: int = 0
     max_micro: int = 16
     fixed_micro: Optional[int] = None
+    partition: str = "uniform"
+    max_vpp: int = 1
 
     def __post_init__(self):
         if self.max_cp < 1:
             raise ValueError(f"max_cp must be >= 1, got {self.max_cp}")
         if self.max_tp < 0 or self.max_micro < 1:
             raise ValueError("max_tp must be >= 0 and max_micro >= 1")
+        if self.partition not in PARTITION_MODES:
+            raise ValueError(
+                f"partition must be one of {PARTITION_MODES}, "
+                f"got {self.partition!r}")
+        if self.max_vpp < 1:
+            raise ValueError(f"max_vpp must be >= 1, got {self.max_vpp}")
 
 
 @dataclass(frozen=True)
@@ -345,12 +364,14 @@ def _num_in(x) -> float:
 
 def _conf_out(conf: Conf) -> dict:
     return {"pp": conf.pp, "tp": conf.tp, "cp": conf.cp, "dp": conf.dp,
-            "bs_micro": conf.bs_micro, "bs_global": conf.bs_global}
+            "vpp": conf.vpp, "bs_micro": conf.bs_micro,
+            "bs_global": conf.bs_global}
 
 
 def _conf_in(d: dict) -> Conf:
     return Conf(pp=d["pp"], tp=d["tp"], dp=d["dp"], bs_micro=d["bs_micro"],
-                bs_global=d["bs_global"], cp=d.get("cp", 1))
+                bs_global=d["bs_global"], cp=d.get("cp", 1),
+                vpp=d.get("vpp", 1))
 
 
 def _mapping_out(mapping: np.ndarray) -> dict:
@@ -366,14 +387,21 @@ def _mapping_in(d: dict) -> np.ndarray:
 
 def _candidate_out(c: Candidate) -> dict:
     return {"conf": _conf_out(c.conf), "mapping": _mapping_out(c.mapping),
-            "latency": _num_out(c.latency), "mem_pred": _num_out(c.mem_pred)}
+            "latency": _num_out(c.latency), "mem_pred": _num_out(c.mem_pred),
+            "partition": (None if c.partition is None
+                          else c.partition.to_json_dict()),
+            "schedule": c.schedule}
 
 
 def _candidate_in(d: dict) -> Candidate:
+    part = d.get("partition")
     return Candidate(conf=_conf_in(d["conf"]),
                      mapping=_mapping_in(d["mapping"]),
                      latency=_num_in(d["latency"]),
-                     mem_pred=_num_in(d["mem_pred"]))
+                     mem_pred=_num_in(d["mem_pred"]),
+                     partition=(None if part is None
+                                else Partition.from_json_dict(part)),
+                     schedule=d.get("schedule", "1f1b"))
 
 
 @dataclass(frozen=True, eq=False)
@@ -404,6 +432,10 @@ class Plan:
         result: the full in-process :class:`~repro.core.search.SearchResult`
             (every candidate, wall-clock timings).  Not serialized —
             ``None`` after :meth:`load`.
+        partition: resolved layer-to-stage :class:`Partition` of the best
+            candidate (``None`` = uniform layering — the historical split).
+        schedule: pipeline schedule of the best candidate ("1f1b" or
+            "interleaved-1f1b").
     """
     conf: Optional[Conf]
     mapping: Optional[np.ndarray]
@@ -413,6 +445,8 @@ class Plan:
     overhead: Overhead
     provenance: Provenance
     result: Optional[SearchResult] = field(default=None, repr=False)
+    partition: Optional[Partition] = None
+    schedule: str = "1f1b"
 
     @property
     def feasible(self) -> bool:
@@ -441,7 +475,9 @@ class Plan:
                    latency=best.latency if best else float("inf"),
                    mem_pred=best.mem_pred if best else float("nan"),
                    ranked=tuple(res.top(keep_top)),
-                   overhead=res.overhead, provenance=prov, result=res)
+                   overhead=res.overhead, provenance=prov, result=res,
+                   partition=best.partition if best else None,
+                   schedule=best.schedule if best else "1f1b")
 
     # -- JSON round trip ----------------------------------------------------
 
@@ -455,7 +491,10 @@ class Plan:
                      {"conf": _conf_out(self.conf),
                       "mapping": _mapping_out(self.mapping),
                       "latency": _num_out(self.latency),
-                      "mem_pred": _num_out(self.mem_pred)}),
+                      "mem_pred": _num_out(self.mem_pred),
+                      "partition": (None if self.partition is None
+                                    else self.partition.to_json_dict()),
+                      "schedule": self.schedule}),
             "ranked": [_candidate_out(c) for c in self.ranked],
             "overhead": self.overhead.counts(),
             "provenance": {
@@ -501,6 +540,7 @@ class Plan:
                           estimator=p["estimator"],
                           tiers=p["tiers"])
         best = d["best"]
+        best_part = None if best is None else best.get("partition")
         return cls(
             conf=None if best is None else _conf_in(best["conf"]),
             mapping=None if best is None else _mapping_in(best["mapping"]),
@@ -510,7 +550,11 @@ class Plan:
                       else _num_in(best["mem_pred"])),
             ranked=tuple(_candidate_in(c) for c in d["ranked"]),
             overhead=Overhead(**d["overhead"]),
-            provenance=prov, result=None)
+            provenance=prov, result=None,
+            partition=(None if best_part is None
+                       else Partition.from_json_dict(best_part)),
+            schedule=("1f1b" if best is None
+                      else best.get("schedule", "1f1b")))
 
     @classmethod
     def load(cls, path) -> "Plan":

@@ -40,7 +40,8 @@ from .cluster import ClusterSpec
 from .dedication import (DedicationEngine, GroupIndex, PairCache, anneal,
                          anneal_multistart)
 from .latency import default_mapping_latencies
-from .memory import MemoryEstimator, enumerate_confs
+from .memory import MemoryEstimator, enumerate_confs, ground_truth_memory
+from .partition import Partition
 from .simulator import Conf, ProfileCache, Workload, default_mapping
 
 if TYPE_CHECKING:                              # pragma: no cover
@@ -57,11 +58,18 @@ class Candidate:
             ``conf.cp > 1``) worker -> GPU dedication.
         latency: estimated seconds/iteration (Eq. 3-6).
         mem_pred: predicted peak bytes/GPU (``nan`` without an estimator).
+        partition: resolved non-uniform chunk partition (None = the legacy
+            uniform split, which is also what a "dp"-mode search records
+            when the DP solver degenerates to the ceil-first boundaries).
+        schedule: pipeline schedule name (``conf.schedule``; recorded for
+            Plan provenance).
     """
     conf: Conf
     mapping: np.ndarray
     latency: float
     mem_pred: float
+    partition: Optional[Partition] = None
+    schedule: str = "1f1b"
 
 
 @dataclass
@@ -173,16 +181,34 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
                                               n_layers=w.cfg.n_layers,
                                               max_cp=space.max_cp,
                                               max_tp=space.max_tp,
-                                              seq=w.seq)
+                                              seq=w.seq,
+                                              max_vpp=space.max_vpp)
              if conf.bs_micro <= space.max_micro
              and (space.fixed_micro is None
                   or conf.bs_micro == space.fixed_micro)]
     enum_s = time.perf_counter() - t0
 
+    # partition-aware profile cache; also the resolver of each conf's
+    # chunk partition (None = uniform -> every legacy bit-exact path)
+    prof_cache = ProfileCache(w, spec, space.partition)
+
     # stage 2: batched memory pruning — one jitted forward for all confs
     tm = time.perf_counter()
     if estimator is not None and confs:
         preds = estimator.predict_batch(w.cfg, confs)
+        # The estimator was fit on the uniform-split ground truth; a
+        # non-uniform partition / interleaved schedule shifts the
+        # worst-stage peak, so rescale its prediction by the ground-truth
+        # ratio.  Uniform plain-1F1B configs skip this entirely (ratio
+        # would be exactly 1), keeping legacy predictions bit-identical.
+        for i, c in enumerate(confs):
+            part = prof_cache.partition_for(c)
+            if part is None and c.vpp == 1:
+                continue
+            legacy = ground_truth_memory(
+                w, dataclasses.replace(c, vpp=1), spec)
+            actual = ground_truth_memory(w, c, spec, partition=part)
+            preds[i] *= actual / legacy
         keep = preds <= mem_limit * estimator.soft_margin
         survivors = [c for c, k in zip(confs, keep) if k]
         mem_preds = preds[keep]
@@ -191,9 +217,9 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
         mem_preds = np.full(len(confs), float("nan"))
     mem_time = time.perf_counter() - tm
 
-    # stage 3: profiles only for survivors, memoized per (pp, tp, bs_micro)
+    # stage 3: profiles only for survivors, memoized per
+    # (pp, tp, cp, bs_micro, vpp, partition)
     tp0 = time.perf_counter()
-    prof_cache = ProfileCache(w, spec)
     profiles = [prof_cache.get(c) for c in survivors]
     profile_s = time.perf_counter() - tp0
 
@@ -267,6 +293,11 @@ def run_search(req: "PlanRequest", bw: np.ndarray, *,
             cands.append(Candidate(conf, default_mapping(conf),
                                    float(base_lat[i]), float(mem_preds[i])))
 
+    # record partition + schedule provenance on every candidate
+    for c in cands:
+        c.partition = prof_cache.partition_for(c.conf)
+        c.schedule = c.conf.schedule
+
     cands.sort(key=lambda c: c.latency)
     return SearchResult(
         best=cands[0] if cands else None,
@@ -286,6 +317,7 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
               n_chains: int = 1, sa_topk: Optional[int] = None,
               max_micro: int = 16, fixed_micro: Optional[int] = None,
               max_cp: int = 1, max_tp: int = 0,
+              partition: str = "uniform", max_vpp: int = 1,
               seed: int = 0,
               dedicate: bool = True) -> SearchResult:
     """Legacy kwarg entry point — a thin shim over the Planner API.
@@ -306,8 +338,8 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
             :func:`run_search`).
         sa_seconds / sa_iters / n_chains / sa_topk: SA budget
             (:class:`~repro.core.plan.Budget`).
-        max_micro / fixed_micro / max_cp / max_tp: search-space knobs
-            (:class:`~repro.core.plan.SearchSpace`).
+        max_micro / fixed_micro / max_cp / max_tp / partition / max_vpp:
+            search-space knobs (:class:`~repro.core.plan.SearchSpace`).
         seed: RNG seed; the whole search is deterministic given it.
         dedicate: ``False`` gives the PPT-L ablation (identity mapping).
 
@@ -320,7 +352,8 @@ def configure(w: Workload, spec: ClusterSpec, bw: np.ndarray, *,
     req = PlanRequest(
         workload=w, spec=spec,
         space=SearchSpace(max_cp=max_cp, max_tp=max_tp, max_micro=max_micro,
-                          fixed_micro=fixed_micro),
+                          fixed_micro=fixed_micro, partition=partition,
+                          max_vpp=max_vpp),
         budget=Budget(sa_seconds=sa_seconds, sa_iters=sa_iters,
                       n_chains=n_chains, sa_topk=sa_topk),
         seed=seed)

@@ -26,6 +26,7 @@ from ..models.config import ModelConfig
 from . import flops as F
 from .cluster import (ClusterSpec, compute_slowdowns, min_group_bw,
                       min_group_bw_batch, ring_allreduce_time)
+from .partition import Partition, PartitionCache, uniform_partition
 
 
 # ---------------------------------------------------------------------------
@@ -40,6 +41,12 @@ class Conf:
     defaults to 1, which reproduces the paper's 3D search space exactly —
     every historical ``Conf(pp, tp, dp, bs_micro, bs_global)`` call keeps
     its meaning.
+
+    ``vpp`` is the interleaved-1F1B virtual-pipeline factor (Megatron-LM's
+    ``virtual_pipeline_model_parallel_size``): each physical stage hosts
+    ``vpp`` non-adjacent model chunks, shrinking the fill/drain bubble by
+    ``~1/vpp`` at the price of ``vpp``× the inter-stage traffic.  ``vpp ==
+    1`` is plain 1F1B — the bit-exact historical schedule.
     """
     pp: int
     tp: int
@@ -47,6 +54,7 @@ class Conf:
     bs_micro: int
     bs_global: int
     cp: int = 1
+    vpp: int = 1
 
     @property
     def n_gpus(self) -> int:
@@ -68,22 +76,35 @@ class Conf:
         degenerate at zero microbatches.
         """
         return (min(self.pp, self.tp, self.cp, self.dp,
-                    self.bs_micro) >= 1 and
+                    self.bs_micro, self.vpp) >= 1 and
                 self.bs_global % self.dp == 0 and
                 self.bs_mini % self.bs_micro == 0 and
                 self.n_mb >= 1)
 
     def schedulable(self) -> bool:
-        """True when memory-efficient 1F1B can fill the pipeline: the
-        schedule needs at least ``pp`` microbatches, otherwise the Eq. 3-6
+        """True when the schedule can fill the pipeline: memory-efficient
+        1F1B needs at least ``pp`` microbatches, otherwise the Eq. 3-6
         exposure count ``n_mb / pp`` drops below one and the model scores a
         schedule that cannot exist (see ``enumerate_confs``'s strict gate).
+        Interleaved-1F1B (``vpp > 1``) additionally requires ``pp > 1`` and
+        ``n_mb % pp == 0`` (Megatron-LM's interleaving constraint); the
+        ``n_layers >= pp * vpp`` chunking bound is checked where the model
+        is known (``enumerate_confs``).
         """
-        return self.valid() and self.n_mb >= self.pp
+        ok = self.valid() and self.n_mb >= self.pp
+        if self.vpp > 1:
+            ok = ok and self.pp > 1 and self.n_mb % self.pp == 0
+        return ok
+
+    @property
+    def schedule(self) -> str:
+        """The pipeline schedule this configuration runs (PLN009 names)."""
+        return "interleaved-1f1b" if self.vpp > 1 else "1f1b"
 
     def __str__(self):
         cp = f"·cp{self.cp}" if self.cp > 1 else ""
-        return (f"pp{self.pp}·tp{self.tp}{cp}·dp{self.dp}"
+        vpp = f"·vpp{self.vpp}" if self.vpp > 1 else ""
+        return (f"pp{self.pp}·tp{self.tp}{cp}{vpp}·dp{self.dp}"
                 f"·mb{self.bs_micro}(n_mb={self.n_mb})")
 
 
@@ -135,9 +156,15 @@ def stage_work(n_layers: int, pp: int) -> Tuple[float, ...]:
     ``ceil(n_layers / pp)`` layers and the rest one fewer; the profiled
     per-microbatch compute (:func:`build_profile`) is priced at the heaviest
     stage, so entry ``x`` is ``layers_x / ceil(n_layers / pp)`` — all 1.0
-    when ``pp`` divides ``n_layers``.  Only the heterogeneous-compute path
-    consumes this (lighter stages are where slow GPUs hurt least); the
-    homogeneous model keeps the paper's uniform-stage formulation.
+    when ``pp`` divides ``n_layers``.
+
+    This is the *uniform-split* special case of ``Profile.stage_work``:
+    non-uniform partitions (``build_profile(..., partition=...)``) replace
+    it with per-stage cost fractions from the per-layer cost vector, and
+    the same consumers (``_hetero_combine``, ``DedicationEngine``,
+    ``jax_engine``, the simulator) price arbitrary per-stage work.  The
+    homogeneous *uniform* model keeps the paper's single-scalar
+    formulation bit-for-bit.
     """
     full = -(-n_layers // pp)
     base, rem = n_layers // pp, n_layers % pp
@@ -177,10 +204,21 @@ class Profile:
     t_cp_bwd: float = 0.0
     msg_cp: float = 0.0            # bytes of one KV block sent per ring step
     cp_ref_bw: float = 300e9       # bandwidth T_cp was profiled at
-    # --- heterogeneous compute (consumed only for tiered specs) ---
-    # per-stage relative work (:func:`stage_work`); None (legacy direct
+    # --- heterogeneous compute / non-uniform partitions ---
+    # per-stage relative work; the uniform split's layer-count ratios
+    # (:func:`stage_work`) or, with a partition, per-stage cost fractions
+    # normalised to the heaviest stage.  None (legacy direct
     # constructions) means uniform stages
     stage_work: Optional[Tuple[float, ...]] = None
+    # --- non-uniform pipeline partition / interleaved-1F1B ---
+    # cumulative chunk boundaries (``pp * vpp`` entries; == stage
+    # boundaries for plain 1F1B).  None = the legacy uniform split, the
+    # trigger for every consumer's bit-exact historical path
+    partition: Optional[Tuple[int, ...]] = None
+    # per virtual-chunk work fractions, same normalisation as
+    # ``stage_work`` (chunks of one stage sum to its stage_work entry);
+    # only set when vpp > 1
+    chunk_work: Optional[Tuple[float, ...]] = None
 
 
 def _profile_static(w: Workload, spec: ClusterSpec,
@@ -205,8 +243,65 @@ def _profile_static(w: Workload, spec: ClusterSpec,
     return stage_params, msg_dp, tp_ref_bw, stage_work(cfg.n_layers, conf.pp)
 
 
+def _profile_nonuniform(w: Workload, spec: ClusterSpec, conf: Conf,
+                        static: Tuple[float, float, float, tuple],
+                        partition: Optional[Partition]) -> Profile:
+    """:func:`_profile_dynamic` for non-uniform partitions and/or
+    interleaved-1F1B: per-chunk costs from the per-layer cost vector, the
+    compute scalar priced at the heaviest *physical* stage, and the
+    embedding/LM-head GEMMs pinned to the end chunks instead of amortized
+    ``1/pp``.  ``partition`` is at chunk granularity (``pp * vpp``
+    boundaries); None means uniform chunking."""
+    cfg = w.cfg
+    stage_params, msg_dp, tp_ref_bw, _ = static
+    pp, vpp = conf.pp, conf.vpp
+    n_chunks = pp * vpp
+    part = partition if partition is not None \
+        else uniform_partition(cfg.n_layers, n_chunks)
+    if part.pp != n_chunks:
+        raise ValueError(f"partition has {part.pp} stages; conf {conf} "
+                         f"needs pp*vpp = {n_chunks}")
+    if part.n_layers != cfg.n_layers:
+        raise ValueError(f"partition covers {part.n_layers} layers; "
+                         f"model has {cfg.n_layers}")
+    tokens_mb = conf.bs_micro * w.seq / conf.cp     # per cp-rank tokens
+    ftok = part.stage_sums(F.layer_cost_per_token(cfg, w.seq))
+    e = F.embed_cost_per_token(cfg)
+    ftok[0] += e                                    # embedding
+    ftok[-1] += e                                   # LM head
+    # physical stage x runs chunks x, x+pp, ... (Megatron interleaving)
+    stage_ftok = ftok.reshape(vpp, pp).sum(axis=0)
+    f_max = float(stage_ftok.max())
+    eff_mb = conf.bs_micro / (conf.bs_micro + 1.0)
+    thru = spec.gpu_flops * spec.efficiency * 1.25 * eff_mb * conf.tp
+    c_fwd = f_max * tokens_mb / thru
+    c_bwd = 2.0 * c_fwd
+    stage_w = tuple((stage_ftok / f_max).tolist())
+    chunk_w = tuple((ftok / f_max).tolist()) if vpp > 1 else None
+
+    # comm terms priced at the heaviest physical stage's layer count
+    sizes = np.asarray(part.sizes).reshape(vpp, pp).sum(axis=0)
+    layers_stage = int(sizes.max())
+    msg_tp = conf.bs_micro * w.seq * cfg.d_model * 2 / conf.cp
+    t_ar = ring_allreduce_time(msg_tp, tp_ref_bw, conf.tp)
+    t_tp = 2 * layers_stage * t_ar
+    msg_pp = conf.bs_micro * w.seq * cfg.d_model * 2.0 / conf.cp
+    if conf.cp > 1:
+        msg_cp = ring_kv_block_bytes(cfg, conf.bs_micro, w.seq, conf.cp)
+        cp_ref_bw = spec.intra_bw if conf.tp * conf.cp <= spec.gpus_per_node \
+            else spec.inter_bw
+        t_cp_fwd = layers_stage * (conf.cp - 1) * msg_cp / cp_ref_bw
+        t_cp_bwd = 2.0 * t_cp_fwd
+    else:
+        msg_cp, t_cp_fwd, t_cp_bwd, cp_ref_bw = 0.0, 0.0, 0.0, tp_ref_bw
+    return Profile(c_fwd, c_bwd, t_tp, 2 * t_tp, msg_pp, msg_dp,
+                   stage_params, tp_ref_bw, t_cp_fwd, t_cp_bwd, msg_cp,
+                   cp_ref_bw, stage_w, tuple(part.boundaries), chunk_w)
+
+
 def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
-                     static: Tuple[float, float, float, tuple]) -> Profile:
+                     static: Tuple[float, float, float, tuple],
+                     partition: Optional[Partition] = None) -> Profile:
     """The ``(bs_micro, cp)``-dependent remainder of :func:`build_profile`.
 
     Context parallelism shards every per-microbatch quantity over the
@@ -214,7 +309,13 @@ def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
     tokens (``tokens_mb / cp`` is an exact float at ``cp == 1``, so the 3D
     numbers are reproduced bit-for-bit), and a ring KV-exchange term
     appears (``cp - 1`` steps per layer, Fujii et al. 2411.06465).
+
+    A non-uniform ``partition`` (or ``conf.vpp > 1``) routes to
+    :func:`_profile_nonuniform`; the default path below is the bit-exact
+    legacy uniform-split formulation.
     """
+    if partition is not None or conf.vpp > 1:
+        return _profile_nonuniform(w, spec, conf, static, partition)
     cfg = w.cfg
     stage_params, msg_dp, tp_ref_bw, stage_w = static
     layers_stage = -(-cfg.n_layers // conf.pp)
@@ -260,7 +361,8 @@ def _profile_dynamic(w: Workload, spec: ClusterSpec, conf: Conf,
                    cp_ref_bw, stage_w)
 
 
-def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
+def build_profile(w: Workload, spec: ClusterSpec, conf: Conf,
+                  partition: Optional[Partition] = None) -> Profile:
     """Derive the profiled per-microbatch quantities for one configuration.
 
     Stands in for the paper's on-cluster profiling stage: per-microbatch
@@ -272,20 +374,28 @@ def build_profile(w: Workload, spec: ClusterSpec, conf: Conf) -> Profile:
         w: workload (model config, sequence length, global batch).
         spec: cluster description.
         conf: parallelism configuration being profiled.
+        partition: optional non-uniform chunk partition (``pp * vpp``
+            boundaries).  None keeps the bit-exact legacy uniform split
+            (unless ``conf.vpp > 1``, which needs per-chunk pricing).
 
     Returns:
         :class:`Profile` consumed by the latency estimators and simulator.
     """
-    return _profile_dynamic(w, spec, conf, _profile_static(w, spec, conf))
+    return _profile_dynamic(w, spec, conf, _profile_static(w, spec, conf),
+                            partition)
 
 
 class ProfileCache:
     """Memoized :func:`build_profile` for one ``(workload, spec)`` pair.
 
-    A :class:`Profile` is fully determined by ``(pp, tp, cp, bs_micro)`` —
-    it does not depend on ``dp`` — so the configurator's enumeration (which
-    yields many ``dp``/microbatch variants per shape) hits the cache heavily.
-    The ``(pp, tp)``-only fields (:func:`_profile_static`) are additionally
+    A :class:`Profile` is fully determined by ``(pp, tp, cp, bs_micro, vpp,
+    partition)`` — it does not depend on ``dp`` — so the configurator's
+    enumeration (which yields many ``dp``/microbatch variants per shape)
+    hits the cache heavily.  The cache key includes the *partition
+    identity* (the resolved chunk boundaries, or None for the uniform
+    split): two partition modes producing different boundaries at the same
+    ``(pp, tp, cp, bs_micro)`` can never alias a stale profile.  The
+    ``(pp, tp)``-only fields (:func:`_profile_static`) are additionally
     shared across microbatch and context-parallel variants; the
     ``(bs_micro, cp)``-dependent remainder is built lazily on first use.
     Returned profiles are bit-identical to :func:`build_profile`.
@@ -296,17 +406,25 @@ class ProfileCache:
         True
     """
 
-    def __init__(self, w: Workload, spec: ClusterSpec):
+    def __init__(self, w: Workload, spec: ClusterSpec,
+                 partition: str = "uniform"):
         self.w = w
         self.spec = spec
+        self._parts = PartitionCache(w.cfg, w.seq, partition)
         self._static: Dict[Tuple[int, int],
                            Tuple[float, float, float, tuple]] = {}
-        self._full: Dict[Tuple[int, int, int, int], Profile] = {}
+        self._full: Dict[tuple, Profile] = {}
+
+    def partition_for(self, conf: Conf) -> Optional[Partition]:
+        """The resolved chunk partition for ``conf`` (None = uniform)."""
+        return self._parts.get(conf.pp * conf.vpp)
 
     def get(self, conf: Conf) -> Profile:
         """The :class:`Profile` for ``conf``, computed at most once per
-        ``(pp, tp, cp, bs_micro)``."""
-        key = (conf.pp, conf.tp, conf.cp, conf.bs_micro)
+        ``(pp, tp, cp, bs_micro, vpp, partition boundaries)``."""
+        part = self.partition_for(conf)
+        key = (conf.pp, conf.tp, conf.cp, conf.bs_micro, conf.vpp,
+               None if part is None else part.boundaries)
         prof = self._full.get(key)
         if prof is None:
             skey = key[:2]
@@ -315,7 +433,7 @@ class ProfileCache:
                 static = self._static[skey] = \
                     _profile_static(self.w, self.spec, conf)
             prof = self._full[key] = \
-                _profile_dynamic(self.w, self.spec, conf, static)
+                _profile_dynamic(self.w, self.spec, conf, static, part)
         return prof
 
 
@@ -477,6 +595,10 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
         Dict with ``total`` seconds plus per-stage/per-link breakdowns
         (``stage_finish``, ``t_dp``, ``t_pp``).
     """
+    if conf.vpp > 1:
+        return _simulate_interleaved(conf, mapping, bw, prof, spec,
+                                     jitter=jitter, contention=contention,
+                                     seed=seed)
     pp, tp, cp, dp, n_mb = conf.pp, conf.tp, conf.cp, conf.dp, conf.n_mb
     rng = np.random.default_rng(seed * 131071 + conf.n_gpus)
 
@@ -518,6 +640,14 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
         c_scale = (stage_slow * sw[:, None]).T          # (dp, pp)
         c_fwd_zs = prof.c_fwd * c_scale
         c_bwd_zs = prof.c_bwd * c_scale
+    elif prof.partition is not None:
+        # non-uniform partition on a homogeneous fleet: stages still do
+        # different amounts of work (the legacy np.full path above stays
+        # untouched for partition-None profiles)
+        sw = np.asarray(prof.stage_work if prof.stage_work is not None
+                        else np.ones(pp))
+        c_fwd_zs = prof.c_fwd * np.broadcast_to(sw, (dp, pp))
+        c_bwd_zs = prof.c_bwd * np.broadcast_to(sw, (dp, pp))
 
     finish_stage = np.zeros((dp, pp))
     for z in range(dp):
@@ -575,8 +705,128 @@ def simulate_iteration(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
             "t_pp": t_pp}
 
 
+def _simulate_interleaved(conf: Conf, mapping: np.ndarray, bw: np.ndarray,
+                          prof: Profile, spec: ClusterSpec, *,
+                          jitter: float, contention: float,
+                          seed: int) -> Dict:
+    """Event-driven interleaved-1F1B (``conf.vpp > 1``) iteration.
+
+    The schedule is plain 1F1B over the *virtual* pipeline of depth
+    ``P = pp * vpp``; virtual stage ``s`` runs on physical stage
+    ``s % pp`` (Megatron-LM's chunk layout), so all ``vpp`` chunks hosted
+    on one physical stage share that stage's serial compute clock.  Each
+    hop between consecutive virtual stages is a real p2p transfer — the
+    wrap hop ``pp-1 -> 0`` included — which is where interleaving pays
+    ``vpp``× the inter-stage traffic for its ``~1/vpp`` bubble.
+    """
+    pp, tp, cp, dp, n_mb = conf.pp, conf.tp, conf.cp, conf.dp, conf.n_mb
+    vpp = conf.vpp
+    P = pp * vpp
+    rng = np.random.default_rng(seed * 131071 + conf.n_gpus)
+
+    m4 = mapping4(conf, mapping)
+
+    # per-replica p2p hop times leaving each physical stage; column pp-1 is
+    # the wrap hop pp-1 -> 0 carrying chunk-boundary activations
+    t_hop = np.zeros((dp, pp))
+    if pp > 1:
+        link = bw[m4[:-1], m4[1:]].reshape(pp - 1, tp * cp, dp).min(axis=1)
+        t_hop[:, :pp - 1] = (prof.msg_pp / link).T
+    wlink = bw[m4[-1], m4[0]].reshape(tp * cp, dp).min(axis=0)
+    t_hop[:, pp - 1] = prof.msg_pp / wlink
+
+    # TP/cp comm per *chunk*: the profiled per-microbatch terms cover the
+    # heaviest stage's full layer count, split across its vpp chunks
+    groups = m4.transpose(0, 2, 3, 1).reshape(pp * cp * dp, tp)
+    gbw = min_group_bw_batch(bw, groups)
+    scale = np.where(np.isfinite(gbw) & (gbw > 0), prof.tp_ref_bw / gbw, 1.0)
+    t_tpf = (prof.t_tp_fwd * scale).reshape(pp, cp, dp).max(axis=1).T / vpp
+
+    t_cpf = np.zeros((dp, pp))
+    if cp > 1:
+        cgroups = m4.transpose(0, 1, 3, 2).reshape(pp * tp * dp, cp)
+        cgbw = min_group_bw_batch(bw, cgroups)
+        cscale = np.where(np.isfinite(cgbw) & (cgbw > 0),
+                          prof.cp_ref_bw / cgbw, 1.0)
+        t_cpf = (prof.t_cp_fwd * cscale).reshape(pp, tp, dp).max(axis=1).T \
+            / vpp
+
+    # per-(replica, virtual chunk) compute; tiered fleets stretch each
+    # chunk by its physical stage's slowest member
+    cw = np.asarray(prof.chunk_work if prof.chunk_work is not None
+                    else [1.0 / vpp] * P)
+    phys_of = np.arange(P) % pp
+    c_f = np.broadcast_to(prof.c_fwd * cw, (dp, P)).copy()
+    c_b = np.broadcast_to(prof.c_bwd * cw, (dp, P)).copy()
+    slow = compute_slowdowns(spec)
+    if slow is not None:
+        stage_slow = slow[m4].reshape(pp, tp * cp, dp).max(axis=1)  # (pp, dp)
+        c_f *= stage_slow[phys_of].T
+        c_b *= stage_slow[phys_of].T
+
+    finish_stage = np.zeros((dp, pp))
+    for z in range(dp):
+        orders = [_one_f_one_b_order(P, s, n_mb) for s in range(P)]
+        ptr = [0] * P
+        t_phys = [0.0] * pp          # shared serial clock per physical stage
+        done_f: Dict[Tuple[int, int], float] = {}
+        done_b: Dict[Tuple[int, int], float] = {}
+        remaining = sum(len(o) for o in orders)
+        while remaining:
+            progressed = False
+            for s in range(P):
+                phys = phys_of[s]
+                while ptr[s] < len(orders[s]):
+                    op, m = orders[s][ptr[s]]
+                    if op == "f":
+                        if s == 0:
+                            ready = 0.0
+                        else:
+                            dep = done_f.get((s - 1, m))
+                            if dep is None:
+                                break
+                            cont = 1.0 + (contention if m >= P else 0.0)
+                            ready = dep + t_hop[z, phys_of[s - 1]] * cont
+                        dur = c_f[z, s] + t_tpf[z, phys] + t_cpf[z, phys]
+                    else:
+                        if s == P - 1:
+                            dep = done_f.get((s, m))
+                        else:
+                            dep = done_b.get((s + 1, m))
+                        if dep is None:
+                            break
+                        ready = dep if s == P - 1 \
+                            else dep + t_hop[z, phys] * (1 + contention)
+                        dur = c_b[z, s] + 2 * t_tpf[z, phys] \
+                            + 2 * t_cpf[z, phys]
+                    if m == 0:
+                        dur *= 1.03          # warmup transient
+                    dur *= 1.0 + jitter * rng.standard_normal()
+                    start = max(t_phys[phys], ready)
+                    end = start + max(dur, 0.0)
+                    if op == "f":
+                        done_f[(s, m)] = end
+                    else:
+                        done_b[(s, m)] = end
+                    t_phys[phys] = end
+                    ptr[s] += 1
+                    remaining -= 1
+                    progressed = True
+            if not progressed:
+                raise RuntimeError("interleaved-1F1B schedule deadlock "
+                                   "(invalid order)")
+        finish_stage[z] = t_phys
+
+    t_dp = dp_allreduce_times(conf, mapping, bw, prof, spec)
+    stage_finish = finish_stage.max(axis=0)          # DP sync couples replicas
+    total = float((stage_finish + t_dp).max())
+    return {"total": total, "stage_finish": stage_finish, "t_dp": t_dp,
+            "t_pp": t_hop}
+
+
 def measure(conf: Conf, mapping: np.ndarray, w: Workload, spec: ClusterSpec,
-            bw_true: np.ndarray, *, seed: int = 0) -> float:
+            bw_true: np.ndarray, *, seed: int = 0,
+            partition: Optional[Partition] = None) -> float:
     """'Run' one training iteration on the simulated cluster.
 
     Args:
@@ -587,10 +837,12 @@ def measure(conf: Conf, mapping: np.ndarray, w: Workload, spec: ClusterSpec,
         spec: cluster description.
         bw_true: ground-truth bandwidth matrix.
         seed: simulator jitter seed.
+        partition: optional non-uniform chunk partition, forwarded to
+            :func:`build_profile`.
 
     Returns:
         Measured seconds for the iteration.
     """
-    prof = build_profile(w, spec, conf)
+    prof = build_profile(w, spec, conf, partition=partition)
     return simulate_iteration(conf, mapping, bw_true, prof, spec,
                               seed=seed)["total"]

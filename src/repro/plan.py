@@ -90,7 +90,8 @@ def cmd_plan(args: argparse.Namespace) -> int:
     req = PlanRequest(
         workload=w, spec=spec,
         space=SearchSpace(max_cp=args.max_cp, max_tp=args.max_tp,
-                          max_micro=args.max_micro),
+                          max_micro=args.max_micro,
+                          partition=args.partition, max_vpp=args.max_vpp),
         budget=Budget(sa_seconds=args.sa_seconds, sa_iters=args.sa_iters,
                       sa_topk=args.sa_topk),
         seed=args.seed)
@@ -115,7 +116,8 @@ def cmd_show(args: argparse.Namespace) -> int:
     print(f"cluster: {p.cluster} ({p.n_gpus} GPUs) "
           f"bw sha256:{p.bw_digest[:16]}…")
     print(f"space: max_cp={p.space.max_cp} max_tp={p.space.max_tp} "
-          f"max_micro={p.space.max_micro} fixed_micro={p.space.fixed_micro}")
+          f"max_micro={p.space.max_micro} fixed_micro={p.space.fixed_micro} "
+          f"partition={p.space.partition} max_vpp={p.space.max_vpp}")
     print(f"budget: sa_seconds={p.budget.sa_seconds} "
           f"sa_iters={p.budget.sa_iters} n_chains={p.budget.n_chains} "
           f"sa_topk={p.budget.sa_topk}")
@@ -140,6 +142,10 @@ def cmd_show(args: argparse.Namespace) -> int:
         return 1
     print(f"\nbest: {plan.conf}  est {_fmt_ms(plan.latency)}/iter  "
           f"mem {_fmt_bytes(plan.mem_pred)}")
+    if plan.partition is not None or plan.schedule != "1f1b":
+        sizes = ("uniform" if plan.partition is None else
+                 ",".join(str(s) for s in plan.partition.sizes))
+        print(f"schedule: {plan.schedule}  chunk layers: {sizes}")
     print("mapping (stages x workers/stage):")
     print(plan.mapping.reshape(plan.conf.pp, -1))
     print(f"\n{'#':>3s} {'config':30s} {'est/iter':>10s} {'mem':>10s}")
@@ -204,6 +210,13 @@ def main(argv=None) -> int:
     p.add_argument("--max-cp", type=int, default=1)
     p.add_argument("--max-tp", type=int, default=0)
     p.add_argument("--max-micro", type=int, default=16)
+    p.add_argument("--partition", choices=("uniform", "dp"),
+                   default="uniform",
+                   help="layer-to-stage split: historical uniform, or the "
+                        "balanced min-max DP over per-layer costs")
+    p.add_argument("--max-vpp", type=int, default=1,
+                   help="open interleaved-1F1B up to this many virtual "
+                        "pipeline chunks per stage (1 = plain 1F1B only)")
     p.add_argument("--sa-seconds", type=float, default=60.0,
                    help="SA wall-clock cap per candidate (default large "
                         "so --sa-iters bounds it deterministically)")

@@ -1,8 +1,8 @@
-"""Golden-file contract for the serialized Plan schema (version 3).
+"""Golden-file contract for the serialized Plan schema (version 4).
 
 Three locks:
 
-1. the checked-in fixture (``tests/data/golden_plan_v3.json``) loads and
+1. the checked-in fixture (``tests/data/golden_plan_v4.json``) loads and
    re-serializes **byte-for-byte** — the wire format cannot drift silently;
 2. regenerating the same request live reproduces the fixture bytes —
    plans are deterministic artifacts, not process-local snapshots;
@@ -18,16 +18,17 @@ import pytest
 from repro.core import Plan, profile_bandwidth
 from repro.core.plan import PLAN_SCHEMA_VERSION
 
-GOLDEN = Path(__file__).parent / "data" / "golden_plan_v3.json"
+GOLDEN = Path(__file__).parent / "data" / "golden_plan_v4.json"
 
-#: Every key path of the version-3 schema.  ``[]`` marks list elements.
+#: Every key path of the version-4 schema.  ``[]`` marks list elements.
 #: CHANGING THIS SET == CHANGING THE WIRE FORMAT: bump PLAN_SCHEMA_VERSION,
 #: regenerate the fixture, and rename it (golden_plan_v<N>.json).
-SCHEMA_V3_PATHS = frozenset({
+SCHEMA_V4_PATHS = frozenset({
     "best.conf.bs_global", "best.conf.bs_micro", "best.conf.cp",
-    "best.conf.dp", "best.conf.pp", "best.conf.tp", "best.latency",
+    "best.conf.dp", "best.conf.pp", "best.conf.tp", "best.conf.vpp",
+    "best.latency",
     "best.mapping.data[]", "best.mapping.dtype", "best.mapping.shape[]",
-    "best.mem_pred",
+    "best.mem_pred", "best.partition", "best.schedule",
     "overhead.n_candidates", "overhead.n_enumerated",
     "provenance.bs_global",
     "provenance.budget.backend", "provenance.budget.hierarchical",
@@ -38,13 +39,16 @@ SCHEMA_V3_PATHS = frozenset({
     "provenance.n_gpus", "provenance.seed", "provenance.seq",
     "provenance.space.fixed_micro", "provenance.space.max_cp",
     "provenance.space.max_micro", "provenance.space.max_tp",
+    "provenance.space.max_vpp", "provenance.space.partition",
     "provenance.tiers.digest", "provenance.tiers.node_tiers[]",
     "provenance.tiers.tiers[].efficiency", "provenance.tiers.tiers[].flops",
     "provenance.tiers.tiers[].mem", "provenance.tiers.tiers[].name",
     "ranked[].conf.bs_global", "ranked[].conf.bs_micro", "ranked[].conf.cp",
     "ranked[].conf.dp", "ranked[].conf.pp", "ranked[].conf.tp",
+    "ranked[].conf.vpp",
     "ranked[].latency", "ranked[].mapping.data[]", "ranked[].mapping.dtype",
     "ranked[].mapping.shape[]", "ranked[].mem_pred",
+    "ranked[].partition", "ranked[].schedule",
     "strategy", "version",
 })
 
@@ -74,6 +78,13 @@ def test_golden_plan_loads_and_roundtrips_byte_for_byte():
     # the v3 additions: backend selection is recorded (null = legacy SA)
     assert plan.provenance.budget.backend is None
     assert plan.provenance.budget.hierarchical is None
+    # the v4 additions: partition/schedule provenance (uniform search →
+    # no partition, plain 1F1B) and the vpp degree on every conf
+    assert plan.partition is None
+    assert plan.schedule == "1f1b"
+    assert plan.conf.vpp == 1
+    assert plan.provenance.space.partition == "uniform"
+    assert plan.provenance.space.max_vpp == 1
 
 
 def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
@@ -89,22 +100,22 @@ def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
 
 def test_schema_version_must_bump_on_shape_change():
     live = _paths(json.loads(GOLDEN.read_text()))
-    if PLAN_SCHEMA_VERSION == 3:
-        assert live == SCHEMA_V3_PATHS, (
+    if PLAN_SCHEMA_VERSION == 4:
+        assert live == SCHEMA_V4_PATHS, (
             "the serialized Plan shape changed but PLAN_SCHEMA_VERSION is "
-            "still 3 — bump it, regenerate tests/data/golden_plan_v3.json "
-            "under the new name, and update SCHEMA_V3_PATHS\n"
-            f"added: {sorted(live - SCHEMA_V3_PATHS)}\n"
-            f"removed: {sorted(SCHEMA_V3_PATHS - live)}")
+            "still 4 — bump it, regenerate tests/data/golden_plan_v4.json "
+            "under the new name, and update SCHEMA_V4_PATHS\n"
+            f"added: {sorted(live - SCHEMA_V4_PATHS)}\n"
+            f"removed: {sorted(SCHEMA_V4_PATHS - live)}")
     else:
         pytest.fail(
-            "PLAN_SCHEMA_VERSION moved past 3: retire this guard by "
+            "PLAN_SCHEMA_VERSION moved past 4: retire this guard by "
             "pinning the new shape and fixture (see gen_golden_plan.py)")
 
 
 def test_loader_rejects_other_schema_versions():
     d = json.loads(GOLDEN.read_text())
-    for bad in (1, 2, PLAN_SCHEMA_VERSION + 1, None):
+    for bad in (1, 2, 3, PLAN_SCHEMA_VERSION + 1, None):
         d["version"] = bad
         with pytest.raises(ValueError, match="schema version"):
             Plan.from_json_dict(d)

@@ -16,7 +16,7 @@ from repro.core import profile_bandwidth
 from repro.core.cluster import A100_TIER, V100_TIER, mixed_fleet_spec
 
 TESTS = Path(__file__).resolve().parent
-GOLDEN = TESTS / "data" / "golden_plan_v3.json"
+GOLDEN = TESTS / "data" / "golden_plan_v4.json"
 
 # the live spec the golden fixture was generated against
 # (tests/data/gen_golden_plan.py)
@@ -142,6 +142,62 @@ def test_ranked_candidates_are_checked_too(golden):
     issues = _mutate(golden, fn)
     bad = [i for i in issues if i.rule == "PLN004"]
     assert bad and all("ranked" in i.where for i in bad)
+
+
+def test_unknown_schedule_name(golden):
+    def fn(m):
+        m["best"]["schedule"] = "gpipe"
+    assert "PLN009" in _errors(_mutate(golden, fn))
+
+
+def test_schedule_vpp_inconsistency(golden):
+    # vpp=1 conf claiming interleaved-1f1b, and vpp=2 claiming plain 1f1b
+    def claims_interleaved(m):
+        m["best"]["schedule"] = "interleaved-1f1b"
+    assert "PLN009" in _errors(_mutate(golden, claims_interleaved))
+
+    def claims_plain(m):
+        m["best"]["conf"]["vpp"] = 2
+    assert "PLN009" in _errors(_mutate(golden, claims_plain))
+
+
+def _with_partition(m):
+    """Attach a valid uniform partition to the golden best (pp=8, 12
+    layers → ceil-first boundaries)."""
+    m["best"]["partition"] = {
+        "n_layers": 12, "boundaries": [2, 4, 6, 8, 9, 10, 11, 12]}
+
+
+def test_valid_partition_passes(golden):
+    issues = _mutate(golden, _with_partition)
+    assert "PLN009" not in _errors(issues)
+
+
+def test_partition_boundaries_not_increasing(golden):
+    def fn(m):
+        _with_partition(m)
+        m["best"]["partition"]["boundaries"][3] = 6   # ties the previous
+    assert "PLN009" in _errors(_mutate(golden, fn))
+
+
+def test_partition_does_not_cover_all_layers(golden):
+    def fn(m):
+        _with_partition(m)
+        m["best"]["partition"]["boundaries"][-1] = 11  # one layer dropped
+    assert "PLN009" in _errors(_mutate(golden, fn))
+
+
+def test_partition_chunk_count_mismatch(golden):
+    def fn(m):
+        _with_partition(m)
+        del m["best"]["partition"]["boundaries"][0]    # 7 chunks, pp=8
+    assert "PLN009" in _errors(_mutate(golden, fn))
+
+
+def test_partition_malformed_dict(golden):
+    def fn(m):
+        m["best"]["partition"] = {"boundaries": [2, 4]}  # no n_layers
+    assert "PLN009" in _errors(_mutate(golden, fn))
 
 
 def test_malformed_json_file(tmp_path):
