@@ -1,0 +1,219 @@
+"""Plan-server benchmark: cold vs cache-hit vs warm-start, and the
+concurrent-throughput curve.
+
+    PYTHONPATH=src python -m benchmarks.bench_server [--quick]
+
+Phase A (latency) runs one in-process :class:`~repro.service.PlanServer`
+and times the three response classes of the service request path:
+
+* **cold** — full Algorithm 1 search (enumerate -> prune -> profile ->
+  pre-score -> SA dedication);
+* **cache hit** — the same request again: fingerprint lookup + verifier
+  admission, byte-identical bytes back, no Strategy invoked;
+* **warm start** — a distance-0 neighbor (same workload, wider microbatch
+  cap): a cold search whose SA chains are seeded from the cached
+  incumbent's mapping.
+
+Phase B (the warm-start economy gate) replays the pinned seeded
+comparison of ``tests/test_service.py`` at benchmark scale: the warm
+search must reach a plan **at least as good** as the cold search of the
+same request while accepting **strictly fewer** improving moves (or
+landing on the identical best).  The benchmark **exits non-zero** if the
+warm search loses — this is the acceptance gate of the service issue,
+kept hot in CI via ``--quick``.
+
+Phase C (throughput) drives the server with N concurrent pipelined
+clients replaying cache hits and prints the requests/sec curve, plus a
+coalescing probe: N identical cold requests land concurrently and the
+server must run exactly ONE search for all of them.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import (MID_RANGE, Budget, PlanRequest, SearchSpace,
+                        Workload, mapping_to_perm, profile_bandwidth,
+                        run_search)
+from repro.models.config import ModelConfig
+from repro.service import PlanClient, PlanServer
+
+GPT = ModelConfig(name="g", family="dense", n_layers=16, d_model=1024,
+                  n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+
+
+def _request(spec, *, max_micro: int, sa_iters: int, seed: int = 7,
+             warm_start=None) -> PlanRequest:
+    return PlanRequest(
+        workload=Workload(GPT, 2048, 32), spec=spec,
+        space=SearchSpace(max_micro=max_micro),
+        budget=Budget(sa_seconds=600.0, sa_iters=sa_iters, sa_topk=2,
+                      warm_start=warm_start),
+        seed=seed)
+
+
+def bench_latency(sa_iters: int):
+    """Cold / hit / warm round-trip latency through a live server."""
+    spec = MID_RANGE.with_nodes(1)
+    server = PlanServer(port=0)
+    server.start_in_thread()
+    client = PlanClient(port=server.port)
+    rows = []
+    try:
+        req = _request(spec, max_micro=2, sa_iters=sa_iters)
+        t0 = time.perf_counter()
+        cold = client.submit(req)
+        rows.append(("cold search", time.perf_counter() - t0, cold))
+
+        t0 = time.perf_counter()
+        hit = client.submit(req)
+        rows.append(("cache hit", time.perf_counter() - t0, hit))
+
+        neighbor = _request(spec, max_micro=4, sa_iters=sa_iters)
+        t0 = time.perf_counter()
+        warm = client.submit(neighbor)
+        rows.append(("warm-started search", time.perf_counter() - t0, warm))
+    finally:
+        server.stop()
+
+    print("== phase A: response-class latency (one server, one client) ==")
+    for name, dt, resp in rows:
+        meta = resp["meta"]
+        extra = (f" warm_start_from={meta['warm_start_from'][:12]}..."
+                 if meta.get("warm_start_from") else "")
+        print(f"  {name:<22} {dt * 1e3:9.2f} ms   "
+              f"cache={meta['cache']}{extra}")
+    ok = True
+    if hit["plan"] != cold["plan"]:
+        print("  FAIL: cache hit was not byte-identical to the cold plan")
+        ok = False
+    if hit["meta"]["cache"] != "hit" or not warm["meta"].get(
+            "warm_start_from"):
+        print("  FAIL: expected a cache hit and a warm-started neighbor")
+        ok = False
+    cold_s, hit_s = rows[0][1], rows[1][1]
+    print(f"  hit speedup over cold: {cold_s / hit_s:8.1f}x")
+    return ok
+
+
+def bench_warm_gate(sa_iters: int):
+    """The acceptance gate: warm SA is never worse, and cheaper."""
+    spec = MID_RANGE.with_nodes(2)
+    bw = profile_bandwidth(spec)[0]
+    seed_req = _request(spec, max_micro=2, sa_iters=sa_iters)
+    incumbent = run_search(seed_req, bw)
+    perm = tuple(int(x) for x in mapping_to_perm(incumbent.best.mapping))
+
+    neighbor = _request(spec, max_micro=4, sa_iters=sa_iters)
+    t0 = time.perf_counter()
+    cold = run_search(neighbor, bw)
+    cold_s = time.perf_counter() - t0
+    warm_req = dataclasses.replace(
+        neighbor, budget=dataclasses.replace(neighbor.budget,
+                                             warm_start=perm))
+    t0 = time.perf_counter()
+    warm = run_search(warm_req, bw)
+    warm_s = time.perf_counter() - t0
+
+    same_best = (warm.best.conf == cold.best.conf
+                 and np.array_equal(warm.best.mapping, cold.best.mapping))
+    print("== phase B: warm-start economy "
+          "(same request, cold vs seeded SA) ==")
+    print(f"  cold: latency {cold.best.latency:.6f}s  "
+          f"accepted-to-best {cold.overhead.sa_accepted_to_best:4d}  "
+          f"wall {cold_s:6.2f}s")
+    print(f"  warm: latency {warm.best.latency:.6f}s  "
+          f"accepted-to-best {warm.overhead.sa_accepted_to_best:4d}  "
+          f"wall {warm_s:6.2f}s")
+    ok = True
+    if warm.best.latency > cold.best.latency:
+        print("  FAIL: warm-started search found a WORSE plan")
+        ok = False
+    if (warm.overhead.sa_accepted_to_best
+            >= cold.overhead.sa_accepted_to_best and not same_best):
+        print("  FAIL: warm start spent >= accepted moves without "
+              "matching the cold best")
+        ok = False
+    if ok:
+        print("  gate passed: plan >= cold's at "
+              f"{warm.overhead.sa_accepted_to_best} vs "
+              f"{cold.overhead.sa_accepted_to_best} accepted moves"
+              + (" (identical best)" if same_best else ""))
+    return ok
+
+
+def bench_throughput(sa_iters: int, levels, hits_per_client: int):
+    """Requests/sec of cache hits under N concurrent pipelined clients,
+    plus the coalescing probe (N identical cold requests, one search)."""
+    spec = MID_RANGE.with_nodes(1)
+    server = PlanServer(port=0)
+    server.start_in_thread()
+    try:
+        req = _request(spec, max_micro=2, sa_iters=sa_iters)
+        PlanClient(port=server.port).submit(req)        # populate the cache
+
+        print("== phase C: concurrent cache-hit throughput ==")
+        for n in levels:
+            def one_client():
+                client = PlanClient(port=server.port)
+                return client.submit_many([req] * hits_per_client)
+
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(max_workers=n) as pool:
+                for resp in pool.map(lambda _: one_client(), range(n)):
+                    assert all(r["meta"]["cache"] == "hit" for r in resp)
+            dt = time.perf_counter() - t0
+            total = n * hits_per_client
+            print(f"  {n:3d} client(s) x {hits_per_client} hits: "
+                  f"{total / dt:9.0f} req/s  ({dt * 1e3:7.1f} ms total)")
+    finally:
+        server.stop()
+
+    # coalescing probe: fresh server, N identical cold requests at once
+    server = PlanServer(port=0)
+    server.start_in_thread()
+    try:
+        n = max(levels)
+        cold_req = _request(spec, max_micro=2, sa_iters=sa_iters, seed=11)
+        client = PlanClient(port=server.port)
+        resps = client.submit_many([cold_req] * n)
+        kinds = sorted(r["meta"]["cache"] for r in resps)
+        searches = server.counters["searches_run"]
+        print(f"  coalescing probe: {n} identical cold requests -> "
+              f"{searches} search(es), "
+              f"{kinds.count('coalesced')} coalesced")
+        if searches != 1 or len({r["plan"] for r in resps}) != 1:
+            print("  FAIL: identical concurrent requests did not share "
+                  "one search")
+            return False
+    finally:
+        server.stop()
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (fewer SA iters, fewer clients)")
+    args = ap.parse_args(argv)
+
+    sa_iters = 40 if args.quick else 200
+    levels = (1, 4, 8) if args.quick else (1, 2, 4, 8, 16)
+    hits = 50 if args.quick else 200
+
+    ok = bench_latency(sa_iters)
+    ok = bench_warm_gate(sa_iters) and ok
+    ok = bench_throughput(sa_iters, levels, hits) and ok
+    if not ok:
+        print("bench_server: GATE FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,4 +1,4 @@
-"""Quickstart: configure -> train -> serve in one minute on CPU.
+"""Quickstart: configure -> train -> generate in one minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -60,7 +60,7 @@ def main():
     for i in range(5):
         tok, _, cache = decode(params, cache, tok, jnp.int32(32 + i))
         out.append(int(tok[0, 0]))
-    print("[serve] greedy continuation:", out)
+    print("[generate] greedy continuation:", out)
 
 
 if __name__ == "__main__":

@@ -46,13 +46,15 @@ from .latency import (amp_latency, default_mapping_latencies, pipette_latency,
 from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
                      fit_memory_estimator, ground_truth_memory, mape)
 from .dedication import (DedicationEngine, GroupIndex, PairCache, SAResult,
-                         anneal, anneal_multistart, perm_to_mapping)
+                         anneal, anneal_multistart, mapping_to_perm,
+                         perm_to_mapping)
 from .annealing import (MovePlan, build_islands, coarse_assign,
                         coarse_orderings, dedicate_candidates,
                         make_move_plan)
-from .search import Candidate, Overhead, SearchResult, configure, run_search
+from .search import (BatchSearchContext, Candidate, Overhead, SearchResult,
+                     configure, run_search)
 from .baselines import amp_configure, mlm_configure, varuna_configure
 from .plan import (STRATEGIES, AMPStrategy, Budget, ExhaustiveStrategy,
-                   MegatronStrategy, Plan, Planner, PlanRequest,
-                   PipetteStrategy, Provenance, SearchSpace, Strategy,
-                   VarunaStrategy, bw_fingerprint)
+                   MegatronStrategy, Plan, PlanLoadError, Planner,
+                   PlanRequest, PipetteStrategy, Provenance, SearchSpace,
+                   Strategy, VarunaStrategy, bw_fingerprint)

@@ -314,7 +314,7 @@ def _run_chain_numpy(engine: DedicationEngine, init_perm: np.ndarray,
     cur = engine.score(perm)
     best, best_perm = cur, perm.copy()
     if iters_k == 0:        # zero-budget chain: init score only
-        return best, best_perm, 0
+        return best, best_perm, 0, 0, 0
     mx = 0.0
     for p in range(plan.n_probes):
         off = offsets[plan.probe_isl[k, p]]
@@ -324,6 +324,7 @@ def _run_chain_numpy(engine: DedicationEngine, init_perm: np.ndarray,
         val, _ = engine.propose(cand, touched)
         mx = max(mx, abs(val - cur))
     temp = max(mx, cur * 1e-3, 1e-12)
+    acc = acc_best = 0
     for t in range(iters_k):
         off = offsets[plan.isl[k, t]]
         cand, touched = _move_numpy(perm, int(plan.kind[k, t]),
@@ -334,10 +335,12 @@ def _run_chain_numpy(engine: DedicationEngine, init_perm: np.ndarray,
         if delta <= 0 or delta < temp * plan.thresh[k, t]:
             perm, cur = cand, val
             engine.commit(pending)
+            acc += 1
             if cur < best:
                 best, best_perm = cur, perm.copy()
+                acc_best = acc
         temp *= alpha
-    return best, best_perm, iters_k
+    return best, best_perm, iters_k, acc, acc_best
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +392,15 @@ def dedicate_candidates(survivors: Sequence[Conf],
     byte-parity across backends holds whenever the time guard does not
     bite (use iteration-bound budgets for reproducible plans, as the
     golden tests do).
+
+    ``budget.warm_start`` (a flat GPU permutation, e.g. recovered from a
+    cached neighbour Plan via :func:`~repro.core.dedication.
+    mapping_to_perm`) seeds every candidate's chains from the incumbent
+    arrangement instead of the coarse assignment whenever the incumbent
+    scores strictly better — the same comparison on both backends (their
+    scorers are bit-identical), so warm-started plans keep byte parity
+    too.  SA tracks best-so-far from the chosen init, so a warm-started
+    candidate can never score worse than its seed permutation.
     """
     backend = budget.backend
     if backend not in ("numpy", "jax"):
@@ -401,6 +413,19 @@ def dedicate_candidates(survivors: Sequence[Conf],
     plan = make_move_plan([len(i) for i in islands], budget.sa_iters,
                           budget.n_chains, seed)
     orderings = coarse_orderings(islands, spec)
+    warm = getattr(budget, "warm_start", None)
+    warm_perm = (None if warm is None
+                 else np.asarray(warm, dtype=np.int64))
+
+    def pick_init(scorer, coarse):
+        """Coarse assignment vs warm incumbent — strictly-better wins,
+        coarse on ties (identical branch on both backends)."""
+        init_perm, offsets, cval = coarse
+        if warm_perm is not None:
+            wval = scorer.score(warm_perm)
+            if wval < cval:
+                return warm_perm, offsets, wval
+        return init_perm, offsets, cval
 
     # vpp joins the shape key: vpp variants of one (pp, tp, cp, dp) carry
     # different stage_work/partition profiles, which the engines share
@@ -428,8 +453,9 @@ def dedicate_candidates(survivors: Sequence[Conf],
                                        pairs=pairs,
                                        device_pairs=device_pairs)
             device_pairs = jeng.device_pairs
-            coarse = {i: coarse_assign(_JaxCandScorer(jeng, ci), islands,
-                                       orderings)
+            coarse = {i: pick_init(_JaxCandScorer(jeng, ci),
+                                   coarse_assign(_JaxCandScorer(jeng, ci),
+                                                 islands, orderings))
                       for ci, i in enumerate(idxs)}
             init = np.stack([coarse[i][0] for i in idxs])
             abs_pos = [_abs_positions(plan, coarse[i][1]) for i in idxs]
@@ -437,7 +463,7 @@ def dedicate_candidates(survivors: Sequence[Conf],
             pbs = np.stack([a[1] for a in abs_pos])
             ppas = np.stack([a[2] for a in abs_pos])
             ppbs = np.stack([a[3] for a in abs_pos])
-            bests, best_perms, _ = jeng.anneal(
+            bests, best_perms, _, accs, accbs = jeng.anneal(
                 init, pas, pbs, plan.kind, plan.thresh, plan.valid,
                 ppas, ppbs, plan.probe_kind, alpha=_ALPHA)
             elapsed = time.perf_counter() - t0
@@ -447,7 +473,9 @@ def dedicate_candidates(survivors: Sequence[Conf],
                 win = int(np.argmin(lats))     # strict <, first occurrence
                 results[i] = _to_result(survivors[i], best_perms[ci][win],
                                         lats[win], coarse[i][2], iters,
-                                        elapsed / len(idxs), lats)
+                                        elapsed / len(idxs), lats,
+                                        int(accs[ci].sum()),
+                                        int(accbs[ci][win]))
         else:
             gidx = GroupIndex.build(survivors[idxs[0]])
             engines = {i: DedicationEngine(survivors[i], bw, profiles[i],
@@ -455,34 +483,40 @@ def dedicate_candidates(survivors: Sequence[Conf],
                                            compute_aware=compute_aware,
                                            pairs=pairs)
                        for i in idxs}
-            coarse = {i: coarse_assign(engines[i], islands, orderings)
+            coarse = {i: pick_init(engines[i],
+                                   coarse_assign(engines[i], islands,
+                                                 orderings))
                       for i in idxs}
             for i in idxs:
                 tc = time.perf_counter()
                 deadline = tc + budget.sa_seconds
                 init_perm, offsets, cval = coarse[i]
-                lats, perms, iters = [], [], 0
+                lats, perms, iters, accs, accbs = [], [], 0, [], []
                 for k in range(plan.n_chains):
                     if time.perf_counter() >= deadline and lats:
                         break                  # out of wall-clock budget
-                    b, p, it = _run_chain_numpy(engines[i], init_perm,
-                                                offsets, plan, k, _ALPHA)
+                    b, p, it, ac, ab = _run_chain_numpy(
+                        engines[i], init_perm, offsets, plan, k, _ALPHA)
                     lats.append(b)
                     perms.append(p)
                     iters += it
+                    accs.append(ac)
+                    accbs.append(ab)
                 win = int(np.argmin(lats))
                 results[i] = _to_result(survivors[i], perms[win],
                                         float(lats[win]), cval, iters,
                                         time.perf_counter() - tc,
-                                        [float(v) for v in lats])
+                                        [float(v) for v in lats],
+                                        sum(accs), accbs[win])  # repro: noqa DET004 -- accepted-move counters are ints; integer addition is order-independent
     return results
 
 
 def _to_result(conf: Conf, perm: np.ndarray, latency: float, coarse: float,
-               iters: int, seconds: float,
-               chain_lats: List[float]) -> SAResult:
+               iters: int, seconds: float, chain_lats: List[float],
+               accepted: int = 0, accepted_to_best: int = 0) -> SAResult:
     perm = np.asarray(perm, dtype=np.int64)
     return SAResult(perm_to_mapping(perm, conf), perm, latency, iters,
                     seconds, trace=[(0, float(coarse)), (iters, latency)],
                     chain_latencies=(chain_lats if len(chain_lats) > 1
-                                     else None))
+                                     else None),
+                    accepted=accepted, accepted_to_best=accepted_to_best)

@@ -55,6 +55,26 @@ def perm_to_mapping(perm: np.ndarray, conf: Conf) -> np.ndarray:
                         conf.tp).transpose(0, 3, 2, 1)
 
 
+def mapping_to_perm(mapping: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`perm_to_mapping`: worker mapping -> flat permutation.
+
+    Round-trips exactly (``mapping_to_perm(perm_to_mapping(p, conf)) == p``)
+    for both the 3D ``(pp, tp, dp)`` and 4D ``(pp, tp, cp, dp)`` shapes.
+    This is how a saved Plan's best mapping becomes a
+    ``Budget.warm_start`` seed permutation for a neighbouring request —
+    the flat GPU ordering is shape-agnostic, so it can warm-start SA on
+    any candidate configuration of the same fleet.
+    """
+    m = np.asarray(mapping)
+    if m.ndim == 3:
+        return np.ascontiguousarray(m.transpose(0, 2, 1)).reshape(-1)
+    if m.ndim == 4:
+        return np.ascontiguousarray(m.transpose(0, 3, 2, 1)).reshape(-1)
+    raise ValueError(
+        f"mapping must be 3D (pp, tp, dp) or 4D (pp, tp, cp, dp), "
+        f"got ndim={m.ndim}")
+
+
 @dataclass
 class SAResult:
     """Outcome of one (or a multi-start batch of) annealing run(s).
@@ -67,6 +87,12 @@ class SAResult:
         seconds: total wall-clock seconds spent annealing.
         trace: ``[(iter, best_so_far), ...]`` of the winning chain.
         chain_latencies: per-chain best latencies (multi-start only).
+        accepted: accepted moves, summed over chains.
+        accepted_to_best: accepted moves the winning chain needed to first
+            reach its best value (0 = the initial permutation was never
+            improved on) — the warm-start economy metric: a chain seeded
+            from a good incumbent reaches the same quality in strictly
+            fewer accepted moves than a cold chain.
 
     Example:
         >>> res = anneal(conf, bw, prof, spec, time_limit_s=0.5, seed=0)
@@ -83,6 +109,8 @@ class SAResult:
     seconds: float
     trace: list
     chain_latencies: Optional[List[float]] = None
+    accepted: int = 0
+    accepted_to_best: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -589,6 +617,7 @@ def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
 
     t0 = time.perf_counter()
     it = 0
+    acc = acc_best = 0
     trace = [(0, best)]
     while it < max_iters and (time.perf_counter() - t0) < time_limit_s:
         cand, touched = _move_span(perm, rng)
@@ -599,15 +628,18 @@ def anneal(conf: Conf, bw: np.ndarray, prof: Profile, spec: ClusterSpec, *,
         delta = val - cur
         if delta <= 0 or rng.random() < math.exp(-delta / max(temp, 1e-15)):
             perm, cur = cand, val
+            acc += 1
             if use_engine:
                 engine.commit(pending)
             if cur < best:
                 best_perm, best = perm.copy(), cur
+                acc_best = acc
                 trace.append((it, best))
         temp *= alpha
         it += 1
     return SAResult(perm_to_mapping(best_perm, conf), best_perm, best, it,
-                    time.perf_counter() - t0, trace)
+                    time.perf_counter() - t0, trace,
+                    accepted=acc, accepted_to_best=acc_best)
 
 
 def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
@@ -646,7 +678,7 @@ def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
     per_t = time_limit_s / n_chains
     base_it, rem_it = divmod(max_iters, n_chains)
     best: Optional[SAResult] = None
-    iters, seconds, lats = 0, 0.0, []
+    iters, seconds, lats, acc = 0, 0.0, [], 0
     for k in range(n_chains):
         res = anneal(conf, bw, prof, spec, time_limit_s=per_t,
                      max_iters=base_it + (1 if k < rem_it else 0),
@@ -656,7 +688,9 @@ def anneal_multistart(conf: Conf, bw: np.ndarray, prof: Profile,
         iters += res.iters
         seconds += res.seconds
         lats.append(res.latency)
+        acc += res.accepted
         if best is None or res.latency < best.latency:
             best = res
     return SAResult(best.mapping, best.perm, best.latency, iters, seconds,
-                    best.trace, chain_latencies=lats)
+                    best.trace, chain_latencies=lats, accepted=acc,
+                    accepted_to_best=best.accepted_to_best)

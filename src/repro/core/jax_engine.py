@@ -402,7 +402,7 @@ class JaxDedicationEngine:
             temp0 = jnp.maximum(jnp.maximum(mx, cur0 * 1e-3), 1e-12)
 
             def step(carry, xs):
-                perm, cur, temp, best, bperm = carry
+                perm, cur, temp, best, bperm, acc, accb = carry
                 kind, pa, pb, thr, ok = xs
                 cand = _apply_move(perm, pos, kind, pa, pb)
                 val = self._score_one(cand, sc, env)
@@ -410,16 +410,19 @@ class JaxDedicationEngine:
                 accept = ok & ((delta <= 0) | (delta < temp * thr))
                 perm = jnp.where(accept, cand, perm)
                 cur = jnp.where(accept, val, cur)
+                acc = acc + accept.astype(acc.dtype)
                 imp = accept & (val < best)
                 best = jnp.where(imp, val, best)
                 bperm = jnp.where(imp, cand, bperm)
+                accb = jnp.where(imp, acc, accb)
                 temp = jnp.where(ok, temp * alpha, temp)
-                return (perm, cur, temp, best, bperm), None
+                return (perm, cur, temp, best, bperm, acc, accb), None
 
-            carry0 = (init_perm, cur0, temp0, cur0, init_perm)
-            (_, cur, _, best, bperm), _ = jax.lax.scan(
+            zero = jnp.zeros((), jnp.int32)
+            carry0 = (init_perm, cur0, temp0, cur0, init_perm, zero, zero)
+            (_, cur, _, best, bperm, acc, accb), _ = jax.lax.scan(
                 step, carry0, (kinds, pas, pbs, thresh, valid))
-            return best, bperm, cur
+            return best, bperm, cur, acc, accb
 
         over_chains = jax.vmap(
             run_chain,
@@ -449,8 +452,12 @@ class JaxDedicationEngine:
             alpha: geometric temperature decay.
 
         Returns:
-            ``(bests, best_perms, finals)`` NumPy arrays of shapes
-            ``(C, K)``, ``(C, K, n)``, ``(C, K)``.
+            ``(bests, best_perms, finals, accepted, accepted_to_best)``
+            NumPy arrays of shapes ``(C, K)``, ``(C, K, n)``, ``(C, K)``,
+            ``(C, K)``, ``(C, K)`` — the last two are each chain's total
+            accepted moves and the accepted-move count at which it first
+            reached its best (0 = never improved on the init), matching
+            :func:`~repro.core.annealing._run_chain_numpy` exactly.
         """
         with enable_x64():
             i32 = jnp.int32
@@ -470,6 +477,7 @@ class JaxDedicationEngine:
             if exe is None:
                 exe = _aot_compile(self._build_anneal(alpha), *args)
                 self._anneal_cache[key] = exe
-            best, bperm, fin = exe(*args)
+            best, bperm, fin, acc, accb = exe(*args)
             return (np.asarray(best), np.asarray(bperm, dtype=np.int64),
-                    np.asarray(fin))
+                    np.asarray(fin), np.asarray(acc, dtype=np.int64),
+                    np.asarray(accb, dtype=np.int64))

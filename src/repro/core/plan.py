@@ -54,9 +54,17 @@ from .simulator import Conf, Workload
 #    ``vpp``, candidates grow ``partition`` (the resolved stage-boundary
 #    artifact, null = uniform layering) and ``schedule`` ("1f1b" /
 #    "interleaved-1f1b"), ``provenance.space`` grows ``partition`` and
-#    ``max_vpp``.  Any further change to the serialized shape MUST bump
-#    this (tests/test_plan_golden.py enforces it).
-PLAN_SCHEMA_VERSION = 4
+#    ``max_vpp``.
+# 5: planning-as-a-service — ``provenance.budget`` grows ``warm_start``
+#    (the incumbent GPU permutation that seeded every SA chain; null =
+#    cold start), ``provenance`` grows ``lineage`` (how the serving layer
+#    produced this plan: warm-start source fingerprint + neighbor
+#    distance; null = a direct cold search), and ``overhead`` grows the
+#    deterministic accepted-move counters ``sa_accepted`` /
+#    ``sa_accepted_to_best`` (the warm-start economy metric).  Any
+#    further change to the serialized shape MUST bump this
+#    (tests/test_plan_golden.py enforces it).
+PLAN_SCHEMA_VERSION = 5
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +131,15 @@ class Budget:
         hierarchical: island-decomposed search (coarse inter-island
             arrangement + within-island refinement; unified backends
             only).  ``None`` = auto: hierarchical at >= 2048 GPUs.
+        warm_start: incumbent flat GPU permutation to seed every SA chain
+            with (``None`` = cold start from the coarse/identity
+            assignment).  Must be a permutation of ``range(n_gpus)``; the
+            plan server derives it from a cached neighbor plan's mapping
+            via :func:`~repro.core.dedication.mapping_to_perm`.  The seed
+            only sets the *starting point* — move schedules are unchanged,
+            and SA tracks best-so-far from the initial permutation, so a
+            warm-started search never returns a worse plan than the
+            incumbent it started from.
     """
     sa_seconds: float = 1.0
     sa_iters: int = 8_000
@@ -130,6 +147,7 @@ class Budget:
     sa_topk: Optional[int] = None
     backend: Optional[str] = None
     hierarchical: Optional[bool] = None
+    warm_start: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.sa_seconds <= 0 or self.sa_iters < 1 or self.n_chains < 1:
@@ -141,6 +159,13 @@ class Budget:
         if self.hierarchical is not None \
                 and not isinstance(self.hierarchical, bool):
             raise ValueError("hierarchical must be None or a bool")
+        if self.warm_start is not None:
+            ws = tuple(int(x) for x in self.warm_start)
+            if sorted(ws) != list(range(len(ws))):
+                raise ValueError(
+                    "warm_start must be a permutation of range(n), got "
+                    f"{self.warm_start!r}")
+            object.__setattr__(self, "warm_start", ws)
 
 
 @dataclass(frozen=True)
@@ -325,6 +350,11 @@ class Provenance:
         estimator: :func:`estimator_provenance` dict, or ``None``.
         tiers: :func:`tier_provenance` dict (device-tier table digest +
             node assignment), or ``None`` for homogeneous clusters.
+        lineage: how the serving layer produced this plan, or ``None``
+            for a direct cold search.  The plan server records
+            ``{"warm_start_from": <fingerprint>, "distance": <float>}``
+            when the search was seeded from a cached neighbor plan —
+            enough to audit which incumbent a warm start descended from.
     """
     strategy: str
     seed: int
@@ -338,11 +368,29 @@ class Provenance:
     budget: Budget
     estimator: Optional[dict] = None
     tiers: Optional[dict] = None
+    lineage: Optional[dict] = None
 
 
 # ---------------------------------------------------------------------------
 # the serializable Plan artifact
 # ---------------------------------------------------------------------------
+
+class PlanLoadError(ValueError):
+    """A plan artifact could not be read: corrupt JSON, an unknown schema
+    version, or a structurally broken document.
+
+    One typed error for every way :meth:`Plan.load` can fail, carrying the
+    offending ``path`` (``None`` when loading from an in-memory dict) so
+    callers — the CLI, the plan server's cache — can report *which* file
+    is bad and fall back (e.g. drop the cache entry and re-search) without
+    fishing through ``json.JSONDecodeError`` / ``KeyError`` /
+    ``ValueError`` separately.
+    """
+
+    def __init__(self, message: str, *, path: Optional[str] = None):
+        super().__init__(message)
+        self.path = path
+
 
 def _num_out(x: float):
     """JSON-safe float: NaN -> None, inf -> "inf" (strict-JSON friendly)."""
@@ -360,6 +408,13 @@ def _num_in(x) -> float:
     if isinstance(x, str):
         return float(x)
     return float(x)
+
+
+def _budget_out(b: Budget) -> dict:
+    d = dataclasses.asdict(b)
+    if d["warm_start"] is not None:
+        d["warm_start"] = list(d["warm_start"])    # tuple -> JSON array
+    return d
 
 
 def _conf_out(conf: Conf) -> dict:
@@ -457,7 +512,8 @@ class Plan:
     def from_search(cls, res: SearchResult, req: PlanRequest,
                     bw: np.ndarray, *, strategy: str,
                     estimator: Optional[MemoryEstimator] = None,
-                    keep_top: int = 10) -> "Plan":
+                    keep_top: int = 10,
+                    lineage: Optional[dict] = None) -> "Plan":
         """Freeze a :class:`SearchResult` into a Plan artifact."""
         w = req.workload
         prov = Provenance(strategy=strategy, seed=req.seed,
@@ -467,7 +523,8 @@ class Plan:
                           bs_global=w.bs_global, space=req.space,
                           budget=req.budget,
                           estimator=estimator_provenance(estimator),
-                          tiers=tier_provenance(req.spec))
+                          tiers=tier_provenance(req.spec),
+                          lineage=lineage)
         best = res.best
         return cls(conf=best.conf if best else None,
                    mapping=(np.asarray(best.mapping).copy()
@@ -506,9 +563,10 @@ class Plan:
                 "seq": prov.seq,
                 "bs_global": prov.bs_global,
                 "space": dataclasses.asdict(prov.space),
-                "budget": dataclasses.asdict(prov.budget),
+                "budget": _budget_out(prov.budget),
                 "estimator": prov.estimator,
                 "tiers": prov.tiers,
+                "lineage": prov.lineage,
             },
         }
 
@@ -527,7 +585,7 @@ class Plan:
     @classmethod
     def from_json_dict(cls, d: dict) -> "Plan":
         if d.get("version") != PLAN_SCHEMA_VERSION:
-            raise ValueError(
+            raise PlanLoadError(
                 f"unsupported plan schema version {d.get('version')!r} "
                 f"(this build reads version {PLAN_SCHEMA_VERSION})")
         p = d["provenance"]
@@ -538,7 +596,8 @@ class Plan:
                           space=SearchSpace(**p["space"]),
                           budget=Budget(**p["budget"]),
                           estimator=p["estimator"],
-                          tiers=p["tiers"])
+                          tiers=p["tiers"],
+                          lineage=p["lineage"])
         best = d["best"]
         best_part = None if best is None else best.get("partition")
         return cls(
@@ -558,9 +617,30 @@ class Plan:
 
     @classmethod
     def load(cls, path) -> "Plan":
-        """Read a Plan back from :meth:`save` output."""
-        with open(path) as f:
-            return cls.from_json_dict(json.load(f))
+        """Read a Plan back from :meth:`save` output.
+
+        Raises:
+            PlanLoadError: corrupt JSON, unknown schema version, or a
+                structurally broken document — one typed error carrying
+                the offending ``path``, whatever went wrong underneath.
+        """
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except json.JSONDecodeError as e:
+            raise PlanLoadError(
+                f"plan artifact is not valid JSON: {e}",
+                path=str(path)) from e
+        try:
+            return cls.from_json_dict(doc)
+        except PlanLoadError as e:
+            if e.path is None:
+                e.path = str(path)
+            raise
+        except (KeyError, TypeError, ValueError) as e:
+            raise PlanLoadError(
+                f"plan artifact is structurally invalid: {e!r}",
+                path=str(path)) from e
 
 
 # ---------------------------------------------------------------------------
@@ -580,7 +660,7 @@ class Planner:
     strategy: Strategy
 
     def plan(self, req: PlanRequest, bw: np.ndarray, *,
-             keep_top: int = 10) -> Plan:
+             keep_top: int = 10, lineage: Optional[dict] = None) -> Plan:
         """Run the strategy and freeze its result into a :class:`Plan`.
 
         Args:
@@ -588,6 +668,9 @@ class Planner:
             bw: ``(G, G)`` profiled bandwidth matrix.
             keep_top: how many ranked fallback candidates the Plan keeps
                 (the full ranking stays on ``plan.result``).
+            lineage: serving-layer provenance recorded on the plan (e.g.
+                which cached neighbor seeded a warm start); ``None`` for
+                a direct cold search.
         """
         res = self.strategy.search(req, bw)
         # provenance must fingerprint the matrix the strategy actually
@@ -597,4 +680,4 @@ class Planner:
             res, req, scoring_bw(bw) if scoring_bw is not None else bw,
             strategy=self.strategy.name,
             estimator=getattr(self.strategy, "estimator", None),
-            keep_top=keep_top)
+            keep_top=keep_top, lineage=lineage)

@@ -177,22 +177,31 @@ def test_numpy_and_jax_chains_bit_identical(setup):
                                      coarse_orderings(islands, SPEC))
     np_best = []
     np_perms = []
+    np_acc = []
+    np_accb = []
     for k in range(3):
-        b, p, _ = _run_chain_numpy(eng, init, offsets, plan, k, _ALPHA)
+        b, p, _, ac, ab = _run_chain_numpy(eng, init, offsets, plan, k,
+                                           _ALPHA)
         np_best.append(b)
         np_perms.append(p)
+        np_acc.append(ac)
+        np_accb.append(ab)
 
     jeng = JaxDedicationEngine([CONF], [prof], bw, SPEC)
     pas = (offsets[plan.isl] + plan.oa)[None]
     pbs = (offsets[plan.isl] + plan.ob)[None]
     ppas = (offsets[plan.probe_isl] + plan.probe_oa)[None]
     ppbs = (offsets[plan.probe_isl] + plan.probe_ob)[None]
-    bests, perms, _ = jeng.anneal(init[None], pas, pbs, plan.kind,
-                                  plan.thresh, plan.valid, ppas, ppbs,
-                                  plan.probe_kind, alpha=_ALPHA)
+    bests, perms, _, accs, accbs = jeng.anneal(
+        init[None], pas, pbs, plan.kind, plan.thresh, plan.valid,
+        ppas, ppbs, plan.probe_kind, alpha=_ALPHA)
     for k in range(3):
         assert float(bests[0, k]).hex() == float(np_best[k]).hex(), k
         assert np.array_equal(perms[0, k], np_perms[k]), k
+        # the accepted-move counters are part of the parity contract too
+        # (the warm-start economy gate reads them from either backend)
+        assert int(accs[0, k]) == np_acc[k], k
+        assert int(accbs[0, k]) == np_accb[k], k
 
 
 def test_chain_result_never_worse_than_init(setup):
@@ -200,11 +209,13 @@ def test_chain_result_never_worse_than_init(setup):
     eng = DedicationEngine(CONF, bw, prof, SPEC)
     plan = make_move_plan([CONF.n_gpus], 40, 1, seed=2)
     init = np.arange(CONF.n_gpus)
-    b, p, it = _run_chain_numpy(eng, init, np.zeros(1, np.int64), plan, 0,
-                                _ALPHA)
+    b, p, it, acc, acc_best = _run_chain_numpy(eng, init,
+                                               np.zeros(1, np.int64),
+                                               plan, 0, _ALPHA)
     assert b <= eng.score(init)
     assert b == eng.score(p)        # reported best matches its permutation
     assert it == 40
+    assert 0 <= acc_best <= acc <= it
     assert perm_to_mapping(p, CONF).shape == (2, 2, 2)
 
 

@@ -1,8 +1,8 @@
-"""Golden-file contract for the serialized Plan schema (version 4).
+"""Golden-file contract for the serialized Plan schema (version 5).
 
 Three locks:
 
-1. the checked-in fixture (``tests/data/golden_plan_v4.json``) loads and
+1. the checked-in fixture (``tests/data/golden_plan_v5.json``) loads and
    re-serializes **byte-for-byte** — the wire format cannot drift silently;
 2. regenerating the same request live reproduces the fixture bytes —
    plans are deterministic artifacts, not process-local snapshots;
@@ -15,27 +15,30 @@ from pathlib import Path
 
 import pytest
 
-from repro.core import Plan, profile_bandwidth
+from repro.core import Plan, PlanLoadError, profile_bandwidth
 from repro.core.plan import PLAN_SCHEMA_VERSION
 
-GOLDEN = Path(__file__).parent / "data" / "golden_plan_v4.json"
+GOLDEN = Path(__file__).parent / "data" / "golden_plan_v5.json"
 
-#: Every key path of the version-4 schema.  ``[]`` marks list elements.
+#: Every key path of the version-5 schema.  ``[]`` marks list elements.
 #: CHANGING THIS SET == CHANGING THE WIRE FORMAT: bump PLAN_SCHEMA_VERSION,
 #: regenerate the fixture, and rename it (golden_plan_v<N>.json).
-SCHEMA_V4_PATHS = frozenset({
+SCHEMA_V5_PATHS = frozenset({
     "best.conf.bs_global", "best.conf.bs_micro", "best.conf.cp",
     "best.conf.dp", "best.conf.pp", "best.conf.tp", "best.conf.vpp",
     "best.latency",
     "best.mapping.data[]", "best.mapping.dtype", "best.mapping.shape[]",
     "best.mem_pred", "best.partition", "best.schedule",
     "overhead.n_candidates", "overhead.n_enumerated",
+    "overhead.sa_accepted", "overhead.sa_accepted_to_best",
     "provenance.bs_global",
     "provenance.budget.backend", "provenance.budget.hierarchical",
     "provenance.budget.n_chains",
     "provenance.budget.sa_iters", "provenance.budget.sa_seconds",
-    "provenance.budget.sa_topk", "provenance.bw_digest",
-    "provenance.cluster", "provenance.estimator", "provenance.model",
+    "provenance.budget.sa_topk", "provenance.budget.warm_start",
+    "provenance.bw_digest",
+    "provenance.cluster", "provenance.estimator", "provenance.lineage",
+    "provenance.model",
     "provenance.n_gpus", "provenance.seed", "provenance.seq",
     "provenance.space.fixed_micro", "provenance.space.max_cp",
     "provenance.space.max_micro", "provenance.space.max_tp",
@@ -85,6 +88,11 @@ def test_golden_plan_loads_and_roundtrips_byte_for_byte():
     assert plan.conf.vpp == 1
     assert plan.provenance.space.partition == "uniform"
     assert plan.provenance.space.max_vpp == 1
+    # the v5 additions: cold search → no warm-start seed, no serving
+    # lineage; the accepted-move counters are recorded and consistent
+    assert plan.provenance.budget.warm_start is None
+    assert plan.provenance.lineage is None
+    assert plan.overhead.sa_accepted >= plan.overhead.sa_accepted_to_best >= 0
 
 
 def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
@@ -100,22 +108,50 @@ def test_golden_plan_reproduced_live_byte_for_byte(tmp_path):
 
 def test_schema_version_must_bump_on_shape_change():
     live = _paths(json.loads(GOLDEN.read_text()))
-    if PLAN_SCHEMA_VERSION == 4:
-        assert live == SCHEMA_V4_PATHS, (
+    if PLAN_SCHEMA_VERSION == 5:
+        assert live == SCHEMA_V5_PATHS, (
             "the serialized Plan shape changed but PLAN_SCHEMA_VERSION is "
-            "still 4 — bump it, regenerate tests/data/golden_plan_v4.json "
-            "under the new name, and update SCHEMA_V4_PATHS\n"
-            f"added: {sorted(live - SCHEMA_V4_PATHS)}\n"
-            f"removed: {sorted(SCHEMA_V4_PATHS - live)}")
+            "still 5 — bump it, regenerate tests/data/golden_plan_v5.json "
+            "under the new name, and update SCHEMA_V5_PATHS\n"
+            f"added: {sorted(live - SCHEMA_V5_PATHS)}\n"
+            f"removed: {sorted(SCHEMA_V5_PATHS - live)}")
     else:
         pytest.fail(
-            "PLAN_SCHEMA_VERSION moved past 4: retire this guard by "
+            "PLAN_SCHEMA_VERSION moved past 5: retire this guard by "
             "pinning the new shape and fixture (see gen_golden_plan.py)")
 
 
 def test_loader_rejects_other_schema_versions():
     d = json.loads(GOLDEN.read_text())
-    for bad in (1, 2, 3, PLAN_SCHEMA_VERSION + 1, None):
+    for bad in (1, 2, 3, 4, PLAN_SCHEMA_VERSION + 1, None):
         d["version"] = bad
+        with pytest.raises(PlanLoadError, match="schema version"):
+            Plan.from_json_dict(d)
+        # PlanLoadError subclasses ValueError, so pre-existing callers
+        # catching the historical type keep working
         with pytest.raises(ValueError, match="schema version"):
             Plan.from_json_dict(d)
+
+
+def test_load_errors_are_typed_and_carry_the_path(tmp_path):
+    bad_json = tmp_path / "corrupt.plan.json"
+    bad_json.write_text("{not json")
+    with pytest.raises(PlanLoadError, match="not valid JSON") as ei:
+        Plan.load(bad_json)
+    assert ei.value.path == str(bad_json)
+
+    wrong_version = tmp_path / "old.plan.json"
+    d = json.loads(GOLDEN.read_text())
+    d["version"] = 3
+    wrong_version.write_text(json.dumps(d))
+    with pytest.raises(PlanLoadError, match="schema version") as ei:
+        Plan.load(wrong_version)
+    assert ei.value.path == str(wrong_version)
+
+    broken = tmp_path / "broken.plan.json"
+    d = json.loads(GOLDEN.read_text())
+    del d["provenance"]["bw_digest"]
+    broken.write_text(json.dumps(d))
+    with pytest.raises(PlanLoadError, match="structurally invalid") as ei:
+        Plan.load(broken)
+    assert ei.value.path == str(broken)

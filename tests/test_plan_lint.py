@@ -16,7 +16,7 @@ from repro.core import profile_bandwidth
 from repro.core.cluster import A100_TIER, V100_TIER, mixed_fleet_spec
 
 TESTS = Path(__file__).resolve().parent
-GOLDEN = TESTS / "data" / "golden_plan_v4.json"
+GOLDEN = TESTS / "data" / "golden_plan_v5.json"
 
 # the live spec the golden fixture was generated against
 # (tests/data/gen_golden_plan.py)
