@@ -44,10 +44,13 @@ from .simulator import (Conf, Profile, ProfileCache, Workload, build_profile,
 from .latency import (amp_latency, default_mapping_latencies, pipette_latency,
                       pipette_latency_ref, varuna_latency)
 from .memory import (MemoryEstimator, analytical_estimate, enumerate_confs,
-                     fit_memory_estimator, ground_truth_memory, mape)
+                     fit_memory_estimator, ground_truth_memory, mape,
+                     rank_state_bytes)
 from .dedication import (DedicationEngine, GroupIndex, PairCache, SAResult,
                          anneal, anneal_multistart, mapping_to_perm,
-                         perm_to_mapping)
+                         perm_to_mapping, project_perm)
+from .migration import (DEFAULT_RESTART_S, PlanDiff, diff_assignments,
+                        resolve_model, state_keys)
 from .annealing import (MovePlan, build_islands, coarse_assign,
                         coarse_orderings, dedicate_candidates,
                         make_move_plan)

@@ -137,12 +137,92 @@ class ClusterSpec:
     def with_nodes(self, n: int) -> "ClusterSpec":
         """Resize to ``n`` nodes.  A tiered spec keeps its tier *pattern*:
         the node -> tier assignment is truncated when shrinking and cycled
-        when growing (so a half-A100/half-V100 fleet stays mixed)."""
+        when growing (so a half-A100/half-V100 fleet stays mixed on both
+        the shrink and the grow path — a joined node inherits the tier the
+        pattern assigns to its slot)."""
         nt = self.node_tiers
         if self.tiers:
             reps = -(-n // len(nt))
             nt = (nt * reps)[:n]
         return dataclasses.replace(self, n_nodes=n, node_tiers=nt)
+
+    def with_node_subset(self, nodes: Sequence[int]) -> "ClusterSpec":
+        """The spec containing exactly ``nodes`` (ids in *this* spec), in
+        the given order.
+
+        This is the event-stream mutation behind churn simulation:
+        preempting node 3 of 16 keeps nodes ``[0..2, 4..15]`` *with their
+        own tiers* — unlike :meth:`with_nodes`, which models a planned
+        resize by truncating/extending the tier pattern.  A returning node
+        re-enters by reappearing in ``nodes``.
+
+        Args:
+            nodes: surviving node ids — non-empty, unique, each in
+                ``[0, n_nodes)``.
+
+        Returns:
+            A validated spec with ``len(nodes)`` nodes; node ``i`` of the
+            result is node ``nodes[i]`` of ``self`` (tier kept).
+        """
+        nodes = [int(i) for i in nodes]
+        if not nodes:
+            raise ValueError("with_node_subset needs at least one node")
+        bad = [i for i in nodes if not 0 <= i < self.n_nodes]
+        if bad:
+            raise ValueError(
+                f"node ids out of range [0, {self.n_nodes}): {bad}")
+        if len(set(nodes)) != len(nodes):
+            raise ValueError(f"duplicate node ids: {nodes}")
+        nt = self.node_tiers
+        if self.tiers:
+            nt = tuple(self.node_tiers[i] for i in nodes)
+        return dataclasses.replace(self, n_nodes=len(nodes), node_tiers=nt)
+
+    def with_compute_factors(self,
+                             factors: Sequence[float]) -> "ClusterSpec":
+        """Scale each node's compute by a factor (stragglers / throttling).
+
+        Node ``i``'s attainable FLOP/s is multiplied by ``factors[i]``
+        (``1.0`` = healthy; a 0.5 straggler runs at half speed).  The
+        result is a tiered spec whose tier table holds one entry per
+        distinct (base tier, factor) pair — the reference scalars are
+        untouched, so per-GPU slowdowns stay >= 1 for factors <= 1.  All
+        factors exactly 1.0 return ``self`` unchanged (the bit-exact
+        scalar path for compute-uniform fleets).
+        """
+        factors = [float(f) for f in factors]
+        if len(factors) != self.n_nodes:
+            raise ValueError(
+                f"need one factor per node: expected {self.n_nodes}, "
+                f"got {len(factors)}")
+        if any(not f > 0 for f in factors):
+            raise ValueError(f"factors must be > 0, got {factors}")
+        if all(f == 1.0 for f in factors):  # repro: noqa DET005 -- 1.0 is the exact "healthy, untouched" sentinel callers pass literally; only that exact value may take the unchanged-spec path
+            return self
+        table: list = []
+        index: dict = {}
+        node_tiers = []
+        for i, f in enumerate(factors):
+            base = self.tiers[self.node_tiers[i]] if self.tiers else \
+                DeviceTier(self.gpu_flops, self.gpu_mem, self.efficiency,
+                           name="base")
+            key = (base.flops, base.mem, base.efficiency, base.name, f)
+            t = index.get(key)
+            if t is None:
+                t = index[key] = len(table)
+                healthy = f == 1.0  # repro: noqa DET005 -- 1.0 is the exact healthy sentinel (see above); factor-1 nodes keep the base tier name
+                name = base.name if healthy else \
+                    f"{base.name or 'base'}*{f:g}"
+                table.append(DeviceTier(base.flops * f, base.mem,
+                                        base.efficiency, name=name))
+            node_tiers.append(t)
+        return dataclasses.replace(self, tiers=tuple(table),
+                                   node_tiers=tuple(node_tiers))
+
+    def node_gpus(self, node: int) -> Tuple[int, ...]:
+        """The flat GPU ids hosted on ``node``."""
+        lo = node * self.gpus_per_node
+        return tuple(range(lo, lo + self.gpus_per_node))
 
     # -- per-GPU device views (scalar-backed when no tiers are set) --------
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -73,6 +73,50 @@ def mapping_to_perm(mapping: np.ndarray) -> np.ndarray:
     raise ValueError(
         f"mapping must be 3D (pp, tp, dp) or 4D (pp, tp, cp, dp), "
         f"got ndim={m.ndim}")
+
+
+def project_perm(perm: np.ndarray, survivors: Sequence[int],
+                 n_new: int) -> np.ndarray:
+    """Project an incumbent permutation onto a resized fleet.
+
+    The elastic warm-start rule: keep the incumbent's *relative* GPU
+    ordering over the GPUs that survived the churn event, renumber them
+    into the new fleet's contiguous id space, and append any brand-new
+    GPUs in id order at the tail (they have no incumbent position).  The
+    result is a valid ``(n_new,)`` permutation usable as
+    ``Budget.warm_start`` for any candidate configuration of the new
+    fleet.
+
+    Args:
+        perm: incumbent flat permutation over the old fleet's GPU ids.
+        survivors: old GPU ids still present, in new-id order — new GPU
+            ``i`` (for ``i < len(survivors)``) is old GPU
+            ``survivors[i]``.  Must be unique and within the old fleet.
+        n_new: GPU count of the new fleet (``>= len(survivors)``).
+
+    Returns:
+        ``(n_new,)`` int permutation of ``0..n_new-1``.
+    """
+    perm = np.asarray(perm)
+    survivors = np.asarray(list(survivors), dtype=np.int64)
+    n_old = perm.shape[0]
+    if survivors.size and (survivors.min() < 0 or survivors.max() >= n_old):
+        raise ValueError(
+            f"survivors must be old GPU ids in [0, {n_old}), "
+            f"got {survivors.tolist()}")
+    if np.unique(survivors).size != survivors.size:
+        raise ValueError(f"duplicate survivor ids: {survivors.tolist()}")
+    if n_new < survivors.size:
+        raise ValueError(
+            f"n_new={n_new} smaller than {survivors.size} survivors")
+    # old id -> new id (or -1 for a departed GPU); vectorised so the
+    # output order is the incumbent's, never a set-iteration order.
+    old_to_new = np.full(n_old, -1, dtype=np.int64)
+    old_to_new[survivors] = np.arange(survivors.size)
+    kept = old_to_new[perm]
+    kept = kept[kept >= 0]
+    fresh = np.arange(survivors.size, n_new, dtype=np.int64)
+    return np.concatenate([kept, fresh])
 
 
 @dataclass

@@ -188,6 +188,35 @@ def ground_truth_memory(w: Workload, conf: Conf, spec: ClusterSpec,
     return weights + acts + ring_kv + logits + framework + frag + residual
 
 
+def rank_state_bytes(cfg: ModelConfig, conf: Conf,
+                     partition: Optional[Partition] = None) -> np.ndarray:
+    """Per-GPU resident parameter + optimizer-state bytes, by pipeline stage.
+
+    Entry ``x`` is what one GPU serving physical stage ``x`` holds on disk
+    and in HBM across restarts: its chunk layers' parameters (interleaved
+    stages host chunks ``x, x + pp, ...``), the embedding / LM-head /
+    shared-block extras, divided by ``tp`` (tensor parallelism shards every
+    weight) and multiplied by :data:`BYTES_PER_PARAM_STATE` (bf16
+    param+grad plus fp32 master/m/v).  dp and cp *replicate* this state, so
+    the number is per-GPU regardless of those degrees — it is the shard a
+    migrated rank must fetch when a re-plan changes its stage or tp slice
+    (the migration-cost model in :mod:`~repro.core.migration`).
+
+    Args:
+        cfg: model configuration.
+        conf: parallelism configuration.
+        partition: non-uniform chunk partition (``None`` = the uniform
+            ceil-first split).
+
+    Returns:
+        ``(pp,)`` float64 array of bytes per GPU.
+    """
+    part = partition if partition is not None \
+        else uniform_partition(cfg.n_layers, conf.pp * conf.vpp)
+    stage_params = _stage_param_array(cfg, part, conf.pp, conf.vpp)
+    return stage_params / conf.tp * BYTES_PER_PARAM_STATE
+
+
 def analytical_estimate(w: Workload, conf: Conf) -> float:
     """The baseline estimator [20]: weights + one microbatch of activations.
 

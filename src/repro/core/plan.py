@@ -353,8 +353,12 @@ class Provenance:
         lineage: how the serving layer produced this plan, or ``None``
             for a direct cold search.  The plan server records
             ``{"warm_start_from": <fingerprint>, "distance": <float>}``
-            when the search was seeded from a cached neighbor plan —
-            enough to audit which incumbent a warm start descended from.
+            when the search was seeded from a cached neighbor plan, and
+            an elastic replan records ``{"replan_of": <incumbent
+            fingerprint>, "warm_start_projected": <bool>, "survivors":
+            <count>}`` — enough to audit which incumbent a warm start /
+            replan descended from.  Free-form dict, serialized as-is
+            (keys inside it are not schema-pinned).
     """
     strategy: str
     seed: int
@@ -641,6 +645,66 @@ class Plan:
             raise PlanLoadError(
                 f"plan artifact is structurally invalid: {e!r}",
                 path=str(path)) from e
+
+    # -- migration cost -----------------------------------------------------
+
+    def diff(self, other: "Plan", *, cfg=None,
+             survivors: Optional[Tuple[int, ...]] = None,
+             n_nodes: Optional[int] = None,
+             inter_bw: float = 12.5e9,
+             restart_s: Optional[float] = None) -> "PlanDiff":
+        """Migration cost of switching from this plan to ``other``.
+
+        ``self`` is the incumbent, ``other`` the successor:
+        ``a.diff(b)`` prices the ranks that must re-fetch their
+        parameter/optimizer shards to go live on ``b`` (see
+        :mod:`repro.core.migration` for the model).  Both plans must be
+        feasible.
+
+        Args:
+            cfg: the shared :class:`~repro.models.config.ModelConfig`;
+                resolved from ``provenance.model`` through the
+                architecture registry when omitted (the two plans must
+                then record the same model name).
+            survivors: when the fleets differ (shrink/grow), successor
+                GPU ``i`` (for ``i < len(survivors)``) is incumbent GPU
+                ``survivors[i]``; successor GPUs beyond that are new.
+                Default: identity on the common id prefix — the
+                ``with_nodes`` truncation convention.
+            n_nodes: healthy node count of the successor fleet (sets the
+                aggregate transfer bandwidth); inferred from the GPU
+                count when omitted.
+            inter_bw: per-node inter-node bandwidth, bytes/s.
+            restart_s: restart barrier seconds (``None`` = the model
+                default, :data:`~repro.core.migration.DEFAULT_RESTART_S`).
+        """
+        from .migration import (DEFAULT_RESTART_S, diff_assignments,
+                                resolve_model)
+        if not (self.feasible and other.feasible):
+            raise ValueError("Plan.diff needs two feasible plans")
+        if cfg is None:
+            a, b = self.provenance.model, other.provenance.model
+            if a != b:
+                raise ValueError(
+                    f"plans record different models ({a!r} vs {b!r}); "
+                    f"pass cfg explicitly")
+            cfg = resolve_model(a)
+        b_to_a = None
+        if survivors is not None:
+            n_b = other.conf.n_gpus
+            b_to_a = [int(survivors[g]) if g < len(survivors) else -1
+                      for g in range(n_b)]
+        return diff_assignments(
+            cfg, self.conf, self.mapping, other.conf, other.mapping,
+            partition_a=self.partition, partition_b=other.partition,
+            b_to_a=b_to_a, n_nodes=n_nodes, inter_bw=inter_bw,
+            restart_s=DEFAULT_RESTART_S if restart_s is None else restart_s)
+
+    def fingerprint(self) -> str:
+        """SHA-256 of the canonical JSON artifact — a content identity
+        (replan lineage records it as ``replan_of``; note the plan
+        *server*'s cache keys on the request fingerprint instead)."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
 
 
 # ---------------------------------------------------------------------------

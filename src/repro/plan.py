@@ -8,6 +8,10 @@
     # pretty-print a saved Plan (no search, no JAX compile)
     python -m repro.plan show plan.json
 
+    # price the migration from one plan to another: ranks moved,
+    # parameter/optimizer bytes re-fetched, estimated downtime
+    python -m repro.plan diff a.json b.json
+
     # statically verify an artifact against a cluster — no re-search
     # (schema, conf arithmetic, 1F1B schedulability, mapping permutation,
     # memory floor, bandwidth/tier digests)
@@ -155,6 +159,44 @@ def cmd_show(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_diff(args: argparse.Namespace) -> int:
+    import json
+
+    plan_a = Plan.load(args.a)
+    plan_b = Plan.load(args.b)
+    cfg = None
+    if args.config:
+        cfg = configs.get(args.config)
+        if args.reduced:
+            cfg = cfg.reduced()
+    try:
+        d = plan_a.diff(plan_b, cfg=cfg,
+                        inter_bw=args.inter_bw * 1e9,
+                        restart_s=args.restart_s)
+    except (KeyError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.format == "json":
+        doc = {"ranks_total": d.ranks_total,
+               "ranks_moved": d.ranks_moved,
+               "ranks_added": d.ranks_added,
+               "ranks_removed": d.ranks_removed,
+               "bytes_migrated": d.bytes_migrated,
+               "downtime_s": d.downtime_s,
+               "conf_changed": d.conf_changed}
+        print(json.dumps(doc, indent=2, sort_keys=True))
+    else:
+        print(f"migration {args.a} -> {args.b}:")
+        print(f"  conf: {plan_a.conf} -> {plan_b.conf}"
+              f"{'' if d.conf_changed else ' (unchanged)'}")
+        print(f"  ranks: {d.ranks_total} total, {d.ranks_moved} moved, "
+              f"{d.ranks_added} added, {d.ranks_removed} removed")
+        print(f"  bytes migrated: {_fmt_bytes(d.bytes_migrated)}")
+        print(f"  est downtime: {d.downtime_s:.2f} s"
+              f"{' (no-op: resumes without a stall)' if d.is_noop else ''}")
+    return 0
+
+
 def cmd_lint(args: argparse.Namespace) -> int:
     # deliberately avoids Plan.load: the verifier diagnoses artifacts the
     # loader would refuse (unknown schema, malformed blocks)
@@ -234,6 +276,24 @@ def main(argv=None) -> int:
     s = sub.add_parser("show", help="pretty-print a saved Plan JSON")
     s.add_argument("path")
     s.set_defaults(fn=cmd_show)
+
+    d = sub.add_parser(
+        "diff", help="migration cost of switching plan A -> plan B "
+                     "(ranks moved, bytes migrated, est downtime)")
+    d.add_argument("a", help="incumbent Plan JSON")
+    d.add_argument("b", help="successor Plan JSON")
+    d.add_argument("--config", default=None,
+                   help="model config name (default: resolve the plans' "
+                        "recorded provenance.model from the registry)")
+    d.add_argument("--reduced", action="store_true",
+                   help="use the --config's reduced() smoke variant")
+    d.add_argument("--inter-bw", type=float, default=12.5,
+                   help="per-node inter-node bandwidth, GB/s "
+                        "(default 12.5)")
+    d.add_argument("--restart-s", type=float, default=None,
+                   help="restart barrier seconds (default: model default)")
+    d.add_argument("--format", choices=("text", "json"), default="text")
+    d.set_defaults(fn=cmd_diff)
 
     v = sub.add_parser(
         "lint", help="statically verify a Plan JSON against a cluster "

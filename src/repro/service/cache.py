@@ -11,11 +11,12 @@ Two layers behind one interface:
   a corrupt or unreadable entry is dropped and counted, never served.
 
 The cache also answers the warm-start question: :meth:`PlanCache.nearest`
-scans entries sharing the request's cluster digest / strategy / day and
-returns the closest workload by log-scale distance over (seq, global
-batch, d_model, n_layers) — the incumbent whose mapping seeds the new
-search's SA chains.  Ties break lexicographically by fingerprint so the
-lookup is fully deterministic.
+scans entries sharing the request's cluster digest / strategy from the
+same or the immediately preceding day and returns the closest workload by
+log-scale distance over (seq, global batch, d_model, n_layers) — the
+incumbent whose mapping seeds the new search's SA chains.  Ties break by
+(distance, day recency, fingerprint) so the lookup is fully
+deterministic.
 """
 from __future__ import annotations
 
@@ -137,21 +138,33 @@ class PlanCache:
                 ) -> Optional[Tuple[str, float]]:
         """The cached entry closest to ``meta`` in workload space.
 
-        Candidates must share ``cluster_digest``, ``strategy`` and ``day``
-        (an incumbent mapping only transfers within the same fleet and
-        bandwidth realisation) and be feasible (carry a best mapping).
-        Distance is the sum of absolute log-ratios over (seq, bs_global,
-        d_model, n_layers) — 0 for the same workload with different
-        budget/space knobs, growing smoothly as the neighbor's shape
-        diverges.  Returns ``(fingerprint, distance)`` or ``None``.
+        Candidates must share ``cluster_digest`` and ``strategy`` (an
+        incumbent mapping only transfers within the same fleet) and be
+        feasible (carry a best mapping).  The bandwidth realisation drifts
+        day to day, so candidates must come from the same *or the
+        immediately preceding* day — a replan just after midnight may
+        still warm-start from last night's incumbent (interconnect drift
+        is gradual; the SA seed only sets a starting point), but older
+        snapshots are rejected.  Same-day neighbors win ties over
+        previous-day ones.  Distance is the sum of absolute log-ratios
+        over (seq, bs_global, d_model, n_layers) — 0 for the same
+        workload with different budget/space knobs, growing smoothly as
+        the neighbor's shape diverges.  Returns ``(fingerprint,
+        distance)`` or ``None``.
         """
-        best: Optional[Tuple[float, str]] = None
+        best: Optional[Tuple[float, int, str]] = None
         for cand in self.entries():
             fp = cand.get("fingerprint")
             if not fp or fp == exclude:
                 continue
             if any(cand.get(k) != meta.get(k)
-                   for k in ("cluster_digest", "strategy", "day")):
+                   for k in ("cluster_digest", "strategy")):
+                continue
+            try:
+                day_diff = int(meta.get("day")) - int(cand.get("day"))
+            except (TypeError, ValueError):
+                continue
+            if day_diff not in (0, 1):
                 continue
             if not cand.get("feasible", True):
                 continue
@@ -163,10 +176,10 @@ class PlanCache:
                 continue
             if dist > max_distance:
                 continue
-            key = (dist, fp)
+            key = (dist, day_diff, fp)
             if best is None or key < best:
                 best = key
-        return None if best is None else (best[1], best[0])
+        return None if best is None else (best[2], best[0])
 
     # -- internals ----------------------------------------------------------
 

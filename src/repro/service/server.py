@@ -20,8 +20,9 @@ first:
    and one jitted ``predict_batch`` forward serve the whole group, each
    member's plan still bit-identical to its standalone search;
 4. **warm-started annealing** — a cold pipette search first asks the
-   cache for its nearest neighbor (same cluster/strategy/day, closest
-   workload); the neighbor's best mapping seeds every SA chain via
+   cache for its nearest neighbor (same cluster/strategy, same or
+   previous day, closest workload); the neighbor's best mapping seeds
+   every SA chain via
    ``Budget.warm_start``, and the plan records the lineage
    (``provenance.lineage.warm_start_from``).
 

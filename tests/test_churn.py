@@ -1,0 +1,275 @@
+"""Continuous replanning under churn: trace determinism, the migration-cost
+model (``Plan.diff`` / ``diff_assignments``), warm-start projection, fleet
+state folding, and the warm-vs-cold replay quality gate."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (MID_RANGE, MIXED_A100_V100, Conf, Workload,
+                        default_mapping, diff_assignments, project_perm,
+                        rank_state_bytes, state_keys)
+from repro.models.config import ModelConfig
+from repro.runtime.churn import (COLD_POLICY, WARM_POLICY, ChurnEvent,
+                                 ChurnTrace, FleetState, generate_trace,
+                                 simulate_churn)
+
+
+def _cfg():
+    return ModelConfig(name="g", family="dense", n_layers=16, d_model=1024,
+                       n_heads=16, n_kv_heads=16, d_ff=4096,
+                       vocab_size=32000)
+
+
+# ---------------------------------------------------------------------------
+# trace generation + determinism
+# ---------------------------------------------------------------------------
+
+def test_trace_same_seed_is_byte_identical():
+    spec = MID_RANGE.with_nodes(8)
+    a = generate_trace(spec, horizon_s=3600, seed=11)
+    b = generate_trace(spec, horizon_s=3600, seed=11)
+    assert a == b
+    assert a.to_json() == b.to_json()
+    assert generate_trace(spec, horizon_s=3600, seed=12).to_json() \
+        != a.to_json()
+
+
+def test_trace_json_round_trip_is_exact(tmp_path):
+    spec = MID_RANGE.with_nodes(6)
+    tr = generate_trace(spec, horizon_s=1800, seed=5)
+    assert len(tr.events) > 0
+    back = ChurnTrace.from_json_dict(json.loads(tr.to_json()))
+    assert back == tr
+    assert back.to_json() == tr.to_json()
+    p = tmp_path / "trace.json"
+    tr.save(p)
+    assert ChurnTrace.load(p) == tr
+
+
+def test_trace_respects_min_nodes_floor():
+    spec = MID_RANGE.with_nodes(4)
+    tr = generate_trace(spec, horizon_s=20000, seed=0, min_nodes=3,
+                        preempt_interval_s=200.0)
+    state = FleetState(spec)
+    for ev in tr.events:
+        state.apply(ev)
+        assert len(state.nodes) >= 3
+
+
+def test_trace_events_sorted_and_validated():
+    spec = MID_RANGE.with_nodes(4)
+    tr = generate_trace(spec, horizon_s=5000, seed=2)
+    ts = [e.t for e in tr.events]
+    assert ts == sorted(ts)
+    assert all(e.kind in ("preempt", "return", "degrade_link", "straggler")
+               for e in tr.events)
+    with pytest.raises(ValueError, match="kind"):
+        ChurnEvent(1.0, "meteor", 0)
+
+
+# ---------------------------------------------------------------------------
+# migration-cost model
+# ---------------------------------------------------------------------------
+
+def test_diff_self_is_exact_noop():
+    cfg = _cfg()
+    conf = Conf(pp=4, tp=2, dp=2, bs_micro=1, bs_global=64)
+    m = default_mapping(conf)
+    d = diff_assignments(cfg, conf, m, conf, m)
+    assert d.is_noop
+    assert (d.ranks_moved, d.ranks_added, d.ranks_removed) == (0, 0, 0)
+    assert d.bytes_migrated == 0.0
+    assert d.downtime_s == 0.0
+    assert not d.conf_changed
+
+
+def test_diff_dp_and_cp_moves_are_free_stage_moves_are_not():
+    """dp/cp replicate parameters, so swapping GPUs inside one
+    (stage, tp) slot fetches nothing; swapping across stages re-fetches
+    both shards."""
+    cfg = _cfg()
+    conf = Conf(pp=4, tp=2, dp=2, bs_micro=1, bs_global=64)
+    m = default_mapping(conf)
+    dp_swap = m.copy()
+    dp_swap[0, 0, 0], dp_swap[0, 0, 1] = m[0, 0, 1], m[0, 0, 0]
+    d = diff_assignments(cfg, conf, m, conf, dp_swap)
+    assert d.is_noop and d.bytes_migrated == 0.0
+
+    stage_swap = m.copy()
+    stage_swap[0, 0, 0], stage_swap[1, 0, 0] = m[1, 0, 0], m[0, 0, 0]
+    d = diff_assignments(cfg, conf, m, conf, stage_swap)
+    assert d.ranks_moved == 2
+    shard = rank_state_bytes(cfg, conf)
+    assert d.bytes_migrated == pytest.approx(float(shard[0] + shard[1]))
+    assert d.downtime_s > 0
+
+
+def test_diff_is_symmetric_on_a_fixed_fleet():
+    """Same conf, same GPU set: migrating A -> B moves exactly the ranks
+    that B -> A moves, and fetches the same bytes (shard sizes match
+    per-slot)."""
+    cfg = _cfg()
+    conf = Conf(pp=2, tp=2, dp=4, bs_micro=1, bs_global=64)
+    rng = np.random.default_rng(7)
+    a = default_mapping(conf)
+    b = a.reshape(-1)[rng.permutation(conf.n_gpus)].reshape(a.shape)
+    d_ab = diff_assignments(cfg, conf, a, conf, b)
+    d_ba = diff_assignments(cfg, conf, b, conf, a)
+    assert d_ab.ranks_moved == d_ba.ranks_moved
+    assert d_ab.bytes_migrated == pytest.approx(d_ba.bytes_migrated)
+    assert d_ab.ranks_added == d_ba.ranks_added == 0
+
+
+def test_diff_shrink_counts_removed_and_grow_counts_added():
+    cfg = _cfg()
+    big = Conf(pp=4, tp=2, dp=2, bs_micro=1, bs_global=64)    # 16 GPUs
+    small = Conf(pp=2, tp=2, dp=2, bs_micro=1, bs_global=64)  # 8 GPUs
+    d = diff_assignments(cfg, big, default_mapping(big),
+                         small, default_mapping(small))
+    assert d.ranks_total == 8
+    assert d.ranks_removed == 8
+    assert d.conf_changed
+    d = diff_assignments(cfg, small, default_mapping(small),
+                         big, default_mapping(big))
+    assert d.ranks_total == 16
+    assert d.ranks_added == 8
+
+
+def test_state_keys_identify_replicated_shards():
+    cfg = _cfg()
+    conf = Conf(pp=2, tp=2, dp=2, bs_micro=1, bs_global=64)
+    keys = state_keys(cfg, conf, default_mapping(conf))
+    assert len(keys) == conf.n_gpus
+    # dp peers of one (stage, tp) slot share a key; tp peers do not
+    m4 = default_mapping(conf).reshape(conf.pp, conf.tp, conf.dp)
+    assert keys[int(m4[0, 0, 0])] == keys[int(m4[0, 0, 1])]
+    assert keys[int(m4[0, 0, 0])] != keys[int(m4[0, 1, 0])]
+    assert keys[int(m4[0, 0, 0])] != keys[int(m4[1, 0, 0])]
+
+
+def test_plan_diff_round_trips_through_save_load(tmp_path):
+    """Artifact-level diff: two saved plans, loaded back, price the same
+    migration as their in-memory originals — and diff(self) is a no-op."""
+    from repro.core import (Budget, Planner, PlanRequest, PipetteStrategy,
+                            SearchSpace, profile_bandwidth)
+
+    cfg = _cfg()
+    w = Workload(cfg, 1024, 64)
+    spec = MID_RANGE.with_nodes(2)
+    bw, _ = profile_bandwidth(spec)
+    mk = lambda seed: Planner(PipetteStrategy()).plan(
+        PlanRequest(workload=w, spec=spec, space=SearchSpace(max_tp=2),
+                    budget=Budget(sa_seconds=1.0, sa_iters=60), seed=seed),
+        bw)
+    pa, pb = mk(0), mk(3)
+    pa.save(tmp_path / "a.json")
+    pb.save(tmp_path / "b.json")
+    from repro.core.plan import Plan
+    la, lb = Plan.load(tmp_path / "a.json"), Plan.load(tmp_path / "b.json")
+    d_mem = pa.diff(pb, cfg=cfg)
+    d_disk = la.diff(lb, cfg=cfg)
+    assert d_mem == d_disk
+    assert la.diff(la, cfg=cfg).is_noop
+
+
+def test_project_perm_keeps_survivor_order_and_appends_fresh():
+    perm = np.array([3, 1, 7, 5, 0, 6, 2, 4])
+    # survivors: old ids 1, 5, 7, 0 -> new ids 0, 1, 2, 3; two new GPUs
+    out = project_perm(perm, [1, 5, 7, 0], 6)
+    # relative incumbent order of survivors: 1 (pos 1), 7 (pos 2),
+    # 5 (pos 3), 0 (pos 4) -> new ids 0, 2, 1, 3, then fresh 4, 5
+    assert out.tolist() == [0, 2, 1, 3, 4, 5]
+    assert sorted(out.tolist()) == list(range(6))
+    # full survival is a pure renumbering
+    same = project_perm(perm, list(range(8)), 8)
+    assert same.tolist() == perm.tolist()
+    with pytest.raises(ValueError, match="duplicate"):
+        project_perm(perm, [1, 1], 4)
+    with pytest.raises(ValueError, match="smaller"):
+        project_perm(perm, [0, 1, 2], 2)
+
+
+# ---------------------------------------------------------------------------
+# fleet state folding
+# ---------------------------------------------------------------------------
+
+def test_fleet_state_subset_keeps_tiers_and_join_order():
+    spec = MIXED_A100_V100.with_nodes(6)
+    state = FleetState(spec)
+    state.apply(ChurnEvent(1.0, "preempt", 2))
+    state.apply(ChurnEvent(2.0, "preempt", 0))
+    state.apply(ChurnEvent(3.0, "return", 2))
+    assert state.nodes == [1, 3, 4, 5, 2]        # survivors, then returner
+    eff = state.effective_spec()
+    assert eff.n_nodes == 5
+    assert eff.node_tiers == tuple(spec.node_tiers[i]
+                                   for i in (1, 3, 4, 5, 2))
+
+
+def test_fleet_state_straggler_and_link_factors():
+    spec = MID_RANGE.with_nodes(4)
+    bw = np.full((spec.n_gpus, spec.n_gpus), 100.0)
+    state = FleetState(spec)
+    state.apply(ChurnEvent(1.0, "straggler", 1, factor=0.5))
+    eff = state.effective_spec()
+    assert eff.tiers  # straggler forces a tiered spec
+    slow = eff.tiers[eff.node_tiers[1]]
+    fast = eff.tiers[eff.node_tiers[0]]
+    assert slow.flops == pytest.approx(fast.flops * 0.5)
+    # recovery restores the scalar (untier-ed) spec
+    state.apply(ChurnEvent(2.0, "straggler", 1, factor=1.0))
+    assert not state.effective_spec().tiers
+
+    state.apply(ChurnEvent(3.0, "degrade_link", 0, peer=2, factor=0.25))
+    sub = state.effective_bw(bw)
+    gpn = spec.gpus_per_node
+    assert sub[0, 2 * gpn] == pytest.approx(25.0)
+    assert sub[2 * gpn, 0] == pytest.approx(25.0)
+    assert sub[0, gpn] == pytest.approx(100.0)
+    state.apply(ChurnEvent(4.0, "degrade_link", 0, peer=2, factor=1.0))
+    assert state.effective_bw(bw)[0, 2 * gpn] == pytest.approx(100.0)
+
+
+def test_fleet_state_gpu_ids_follow_node_order():
+    spec = MID_RANGE.with_nodes(3)
+    state = FleetState(spec)
+    state.apply(ChurnEvent(1.0, "preempt", 0))
+    state.apply(ChurnEvent(2.0, "return", 0))
+    gpn = spec.gpus_per_node
+    assert state.gpu_ids() == (
+        list(range(gpn, 3 * gpn)) + list(range(gpn)))
+
+
+# ---------------------------------------------------------------------------
+# the replay quality gate (small fleet; the 16-node gate runs in
+# benchmarks/bench_churn.py)
+# ---------------------------------------------------------------------------
+
+def test_warm_incremental_beats_cold_on_seeded_trace():
+    """The tentpole gate in miniature: on a seeded preempt/return trace
+    with G-preserving events, warm incremental replanning (projected
+    warm-start + migration-aware selection) sustains at least the
+    throughput of from-scratch replanning, with no more downtime — and
+    both policies' PlanDiff accounting matches the independent
+    resident-state ledger exactly."""
+    from repro import configs
+    cfg = configs.get("gpt-1.1b").reduced()
+    w = Workload(cfg, 2048, 64)
+    spec = MID_RANGE.with_nodes(4)
+    trace = generate_trace(spec, horizon_s=1200, seed=3, min_nodes=2,
+                           preempt_interval_s=400.0,
+                           degrade_interval_s=500.0,
+                           straggler_interval_s=500.0)
+    assert any(e.kind == "preempt" for e in trace.events)
+    warm = dataclasses.replace(WARM_POLICY, sa_iters=150, sa_seconds=0.1)
+    cold = dataclasses.replace(COLD_POLICY, sa_iters=150, sa_seconds=0.1)
+    rw = simulate_churn(w, spec, trace, warm)
+    rc = simulate_churn(w, spec, trace, cold)
+    assert rw.replans == rc.replans == len(trace.events)
+    assert rw.samples > rc.samples
+    assert rw.downtime_s <= rc.downtime_s
+    for rep in (rw, rc):
+        assert rep.bytes_migrated == pytest.approx(rep.resident_bytes)
+        assert rep.ranks_moved == rep.resident_moved

@@ -218,6 +218,152 @@ def test_elastic_replan_refits_3d_estimator_for_4d_search():
     assert any(c.conf.cp > 1 for c in plan.result.ranked)
 
 
+def _tiny_workload():
+    cfg = ModelConfig(name="g", family="dense", n_layers=16, d_model=1024,
+                      n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=32000)
+    return Workload(cfg, 1024, 64)
+
+
+@pytest.mark.parametrize("kw", [
+    {"partition": "dp"},
+    {"max_vpp": 2},
+    {"backend": "numpy"},
+    {"backend": "jax"},
+    {"hierarchical": False},
+    {"warm_start": tuple(range(24))},
+], ids=lambda kw: next(iter(kw)))
+def test_replan_routes_every_new_request_knob(kw):
+    """Regression (ISSUE 10): the replan() kwarg split is derived from the
+    SearchSpace/Budget dataclass fields, so every knob added since the
+    original hardcoded allowlists must route — passing any of these used
+    to raise ``TypeError: unknown replan() keywords``."""
+    from repro.core.plan import Budget, SearchSpace
+
+    w = _tiny_workload()
+    ep = replan(w, MID_RANGE.with_nodes(4), healthy_nodes=3,
+                sa_seconds=0.5, sa_iters=60, sa_topk=1, **kw)
+    assert ep.plan.feasible
+    space_fields = {f.name for f in __import__("dataclasses").fields(
+        SearchSpace)}
+    for k, v in kw.items():
+        dest = (ep.plan.provenance.space if k in space_fields
+                else ep.plan.provenance.budget)
+        assert getattr(dest, k) == v, k
+
+
+def test_replan_backend_jax_with_vpp_end_to_end():
+    """The acceptance-criteria call: jitted SA backend + interleaved-1F1B
+    space through an elastic replan."""
+    w = _tiny_workload()
+    ep = replan(w, MID_RANGE.with_nodes(4), healthy_nodes=3,
+                sa_seconds=1.0, sa_iters=60, sa_topk=1,
+                backend="jax", max_vpp=2)
+    assert ep.plan.feasible
+    assert ep.plan.provenance.budget.backend == "jax"
+    assert ep.plan.provenance.space.max_vpp == 2
+    assert any(c.conf.vpp > 1 for c in ep.result.ranked)
+
+
+def test_replan_unknown_kwarg_still_raises():
+    w = _tiny_workload()
+    with pytest.raises(TypeError, match="unknown replan"):
+        replan(w, MID_RANGE.with_nodes(4), healthy_nodes=3,
+               sa_seconds=0.05, definitely_not_a_knob=1)
+
+
+def test_with_nodes_grow_extends_tier_pattern():
+    """Satellite (ISSUE 10): the grow path of a tiered spec must cycle
+    the tier pattern, not truncate or raise — a joined node inherits the
+    tier its slot would have had."""
+    from repro.core import MIXED_A100_V100
+
+    spec = MIXED_A100_V100
+    pat = spec.node_tiers
+    grown = spec.with_nodes(spec.n_nodes + 4)
+    assert grown.n_nodes == spec.n_nodes + 4
+    assert len(grown.node_tiers) == grown.n_nodes
+    reps = -(-grown.n_nodes // len(pat))
+    assert grown.node_tiers == (pat * reps)[:grown.n_nodes]
+    # and the grow path works end-to-end through replan
+    w = _tiny_workload()
+    small = spec.with_nodes(2)
+    ep = replan(w, small, healthy_nodes=3, sa_seconds=0.5, sa_iters=40,
+                sa_topk=1)
+    assert ep.n_gpus == 3 * small.gpus_per_node
+
+
+def test_replan_node_subset_keeps_surviving_tiers():
+    """healthy_nodes may be an explicit surviving-node list: "node 1 of 4
+    died" keeps nodes 0, 2, 3 *with their own tiers* — unlike the
+    count-based truncation."""
+    from repro.core import MIXED_A100_V100
+
+    spec = MIXED_A100_V100.with_nodes(4)
+    w = _tiny_workload()
+    ep = replan(w, spec, healthy_nodes=[0, 2, 3], sa_seconds=0.5,
+                sa_iters=40, sa_topk=1)
+    assert ep.n_gpus == 3 * spec.gpus_per_node
+    tiers = ep.plan.provenance.tiers
+    assert tiers is not None
+    assert tuple(tiers["node_tiers"]) == tuple(
+        spec.node_tiers[i] for i in (0, 2, 3))
+
+
+def test_partition_and_vpp_do_not_stale_estimator():
+    """Satellite (ISSUE 10): partition mode and vpp change which layers a
+    stage holds, not the feature layout the memory fit learned — the
+    estimator must be kept, not refit."""
+    from repro.core import fit_memory_estimator
+
+    w = _tiny_workload()
+    spec = MID_RANGE.with_nodes(4)
+    est = fit_memory_estimator([w], spec, fit_nodes=2, steps=1500,
+                               residual=True)
+    ep = replan(w, spec, healthy_nodes=3, estimator=est, sa_seconds=0.5,
+                sa_iters=40, sa_topk=1, partition="dp", max_vpp=2)
+    assert not ep.refit_estimator
+    assert ep.plan.feasible
+
+
+def test_grown_spec_does_not_stale_estimator():
+    """Growing the node count keeps gpu_mem/gpus_per_node, so the fit
+    extrapolates over GPU count by design (the same axis a shrink already
+    exercised) — no refit on a node join."""
+    from repro.core import fit_memory_estimator
+
+    w = _tiny_workload()
+    spec = MID_RANGE.with_nodes(2)
+    est = fit_memory_estimator([w], spec, fit_nodes=2, steps=1500,
+                               residual=True)
+    ep = replan(w, spec, healthy_nodes=3, estimator=est, sa_seconds=0.5,
+                sa_iters=40, sa_topk=1)
+    assert not ep.refit_estimator
+    assert ep.n_gpus == 24
+
+
+def test_incremental_replan_records_lineage_and_migration():
+    """An incumbent-seeded replan warm-starts from the projected incumbent
+    permutation, records replan lineage, and prices the migration of the
+    chosen candidate."""
+    w = _tiny_workload()
+    spec = MID_RANGE.with_nodes(3)
+    first = replan(w, spec, healthy_nodes=3, sa_seconds=0.5, sa_iters=60,
+                   sa_topk=1, backend="numpy")
+    second = replan(w, spec, healthy_nodes=3, incumbent=first.plan,
+                    migration_weight=1e-4, sa_seconds=0.5, sa_iters=60,
+                    sa_topk=1, backend="numpy")
+    lin = second.plan.provenance.lineage
+    assert lin is not None
+    assert lin["replan_of"] == first.plan.fingerprint()
+    assert lin["warm_start_projected"] is True
+    assert lin["survivors"] == 24
+    ws = second.plan.provenance.budget.warm_start
+    assert ws is not None and sorted(ws) == list(range(24))
+    assert second.chosen is not None
+    assert second.migration is not None
+    assert second.migration.ranks_total == 24
+
+
 # ---------------------------------------------------------------------------
 # optimizer + compression
 # ---------------------------------------------------------------------------

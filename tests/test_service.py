@@ -208,6 +208,32 @@ def test_cache_nearest_neighbor_lookup_is_scoped_and_deterministic():
     assert fp == "also-same"
 
 
+def test_cache_nearest_accepts_previous_day_across_midnight():
+    """Regression (ISSUE 10): warm-start eligibility used to require the
+    exact same day, so a replan at 00:01 rejected an incumbent cached at
+    23:59.  The previous day is now accepted (interconnect drift is
+    gradual and the seed only sets a starting point); anything older — or
+    from the future — is still rejected, and same-day neighbors win ties
+    over previous-day ones."""
+    cache = PlanCache()
+    cache.put("yesterday", _meta("yesterday", day=6), "{}")
+    cache.put("two-days-old", _meta("two-days-old", day=5), "{}")
+    cache.put("tomorrow", _meta("tomorrow", day=8), "{}")
+    query = _meta("query", day=7)
+    fp, dist = cache.nearest(query, exclude="query")
+    assert (fp, dist) == ("yesterday", 0.0)
+    # a same-day neighbor at equal distance beats the previous-day one,
+    # even when the previous-day fingerprint sorts first
+    cache.put("z-today", _meta("z-today", day=7), "{}")
+    fp, _ = cache.nearest(query, exclude="query")
+    assert fp == "z-today"
+    # with only stale/future entries there is no warm-start source
+    lonely = PlanCache()
+    lonely.put("two-days-old", _meta("two-days-old", day=5), "{}")
+    lonely.put("tomorrow", _meta("tomorrow", day=8), "{}")
+    assert lonely.nearest(query, exclude="query") is None
+
+
 # ---------------------------------------------------------------------------
 # batched search contexts (N requests, one enumerate/predict_batch pass)
 # ---------------------------------------------------------------------------
